@@ -1,0 +1,86 @@
+"""Drive the full (arch x shape x mesh) dry-run sweep as subprocesses.
+
+Each combo runs in a fresh process (XLA device-count flags are per-process).
+Results cached as JSON under experiments/dryrun/; reruns skip existing files.
+
+Usage: PYTHONPATH=src python benchmarks/dryrun_all.py [--multi-pod-only] [--single-pod-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    # roughly smallest-compile-first so failures surface early
+    "qwen3-0.6b",
+    "whisper-tiny",
+    "xlstm-350m",
+    "granite-moe-3b-a800m",
+    "granite-3-8b",
+    "moonshot-v1-16b-a3b",
+    "zamba2-7b",
+    "gemma3-27b",
+    "kimi-k2-1t-a32b",
+    "qwen2-vl-72b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+OUT = "experiments/dryrun"
+
+
+def result_path(arch_name: str, shape: str, mesh: str) -> str:
+    return os.path.join(OUT, f"{arch_name}_{shape}_{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    meshes = ["pod1", "pod2"]
+    if args.multi_pod_only:
+        meshes = ["pod2"]
+    if args.single_pod_only:
+        meshes = ["pod1"]
+
+    os.makedirs(OUT, exist_ok=True)
+    fail_log = os.path.join(OUT, "failures.log")
+    for mesh in meshes:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                # arch name inside the json uses the config's display name
+                from importlib import import_module  # local to avoid jax import here
+                disp = arch.replace("_", "-")
+                path = result_path(disp, shape, mesh)
+                if os.path.exists(path):
+                    print(f"cached  {disp} {shape} {mesh}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch, "--shape", shape, "--out", OUT]
+                if mesh == "pod2":
+                    cmd.append("--multi-pod")
+                t0 = time.time()
+                print(f"RUN     {disp} {shape} {mesh} ...", flush=True)
+                try:
+                    r = subprocess.run(
+                        cmd, capture_output=True, text=True, timeout=args.timeout,
+                        env=dict(os.environ, PYTHONPATH="src"), cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    )
+                    if r.returncode != 0:
+                        with open(fail_log, "a") as f:
+                            f.write(f"=== {disp} {shape} {mesh} rc={r.returncode}\n{r.stdout[-2000:]}\n{r.stderr[-4000:]}\n")
+                        print(f"FAIL    {disp} {shape} {mesh} ({time.time()-t0:.0f}s) rc={r.returncode}")
+                    else:
+                        print(f"ok      {disp} {shape} {mesh} ({time.time()-t0:.0f}s)")
+                except subprocess.TimeoutExpired:
+                    with open(fail_log, "a") as f:
+                        f.write(f"=== {disp} {shape} {mesh} TIMEOUT\n")
+                    print(f"TIMEOUT {disp} {shape} {mesh}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Pallas tile-raster kernel micro-benchmark (interpret mode on CPU).
+
+On CPU this measures the *reference semantics* path; the derived column
+reports modeled TPU time from the kernel's FLOP/byte footprint (the number
+that matters for the §Perf log). CSV: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projection as P
+from repro.core import render as R
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+from typing import Callable
+
+
+def _timeit(f: Callable, *args, n=5) -> float:
+    f(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+    for n, h, w, k in [(500, 64, 64, 256), (2000, 128, 128, 256)]:
+        pts = rng.normal(0, 0.4, (n, 3)).astype(np.float32)
+        from repro.core import gaussians as G
+
+        g = G.init_from_points(jnp.asarray(pts), init_scale=0.05)
+        cam = P.look_at_camera([0, 0, -3], [0, 0, 0], [0, 1, 0], w * 1.2, w * 1.2, w / 2, h / 2)
+        packed, _ = P.sort_by_depth(P.project(g, cam))
+
+        for backend in ("ref", "pallas"):
+            f = jax.jit(
+                lambda p: R.render_packed(p, img_h=h, img_w=w, tile_h=16, tile_w=16,
+                                          k_per_tile=k, backend=backend)
+            )
+            us = _timeit(f, packed)
+            tiles = (h // 16) * (w // 16)
+            flops = tiles * k * 16 * 16 * 40  # ~40 flop per splat-pixel
+            bytes_ = tiles * k * 11 * 4 + h * w * 4 * 4
+            derived = max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW) * 1e6
+            out.append((f"raster_{backend}_{n}g_{h}px", us, f"tpu_model_us={derived:.1f}"))
+    return out
+
+
+def flash_rows():
+    out = []
+    import jax.random as jr
+
+    for b, s, h, hd in [(1, 512, 4, 64), (1, 1024, 8, 128)]:
+        ks = jr.split(jr.key(0), 3)
+        q = jr.normal(ks[0], (b, s, h, hd), jnp.float32)
+        k = jr.normal(ks[1], (b, s, h, hd), jnp.float32)
+        v = jr.normal(ks[2], (b, s, h, hd), jnp.float32)
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        for backend in ("ref", "pallas"):
+            f = jax.jit(lambda q, k, v: (flash_attention(q, k, v, backend=backend),))
+            us = _timeit(f, q, k, v)
+            flops = 4 * b * h * s * s * hd
+            derived = max(flops / PEAK_FLOPS_BF16, (3 * b * s * h * hd * 2) / HBM_BW) * 1e6
+            out.append((f"flashattn_{backend}_{s}s_{h}h_{hd}d", us, f"tpu_model_us={derived:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows() + flash_rows():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -1,0 +1,45 @@
+"""§Roofline table: read the dry-run JSONs, print the three-term roofline per
+(arch x shape) on the single-pod mesh, with dominant term, MODEL_FLOPS ratio
+and the one-line improvement note."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+NOTES = {
+    "compute": "raise arithmetic intensity (bf16 matmul paths, larger per-chip tiles)",
+    "memory": "fuse/shorten elementwise chains, bf16 intermediates, fewer remat recomputes",
+    "collective": "re-shard to cut gathered bytes (seq-shard caches, 2D weight sharding), overlap with compute",
+}
+
+
+def load(dirname="experiments/dryrun", mesh="pod1"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, f"*_{mesh}.json"))):
+        d = json.load(open(path))
+        rows.append(d)
+    return rows
+
+
+def table(out=print, dirname="experiments/dryrun", mesh="pod1"):
+    rows = load(dirname, mesh)
+    out("arch,shape,compute_ms,memory_ms,collective_ms,dominant,useful_flop_ratio,fits_16gb,note")
+    for d in rows:
+        if d.get("skipped"):
+            out(f"{d['arch']},{d['shape']},SKIP({d['skipped'][:40]}),,,,,,")
+            continue
+        r = d["roofline"]
+        ratio = d.get("useful_flop_ratio")
+        out(
+            f"{d['arch']},{d['shape']},{r['compute_s']*1e3:.2f},{r['memory_s']*1e3:.2f},"
+            f"{r['collective_s']*1e3:.2f},{r['dominant']},"
+            + (f"{ratio:.3f}" if ratio else "n/a")
+            + f",{d['memory_analysis']['fits_16gb']},{NOTES[r['dominant']]}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    table(mesh=sys.argv[1] if len(sys.argv) > 1 else "pod1")

@@ -1,0 +1,46 @@
+"""Serving example for the transformer substrate: batched greedy decode with
+a KV/state cache — the serve_step that the decode_32k / long_500k dry-run
+shapes lower at production scale.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b --tokens 16
+(uses the reduced smoke variant so it runs in seconds on CPU)
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import api, lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).smoke_config()
+    print(f"{cfg.name} (reduced): {cfg.n_layers}L d={cfg.d_model} arch={cfg.arch_type}")
+    params = lm.init_params(cfg, jax.random.key(0))
+    serve = jax.jit(api.make_serve_step(cfg))
+    cache = api.init_cache(cfg, args.batch, args.cache_len)
+
+    toks = jnp.full((args.batch, 1), 1, jnp.int32)
+    out = []
+    for t in range(args.tokens):
+        logits, cache = serve(params, cache, toks, jnp.asarray(t, jnp.int32))
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(np.asarray(toks[:, 0]))
+    gen = np.stack(out, 1)
+    print("greedy-decoded token ids (batch x steps):")
+    print(gen)
+    assert np.isfinite(np.asarray(logits)).all()
+    print("ok: cache-backed batched decode ran", args.tokens, "steps")
+
+
+if __name__ == "__main__":
+    main()

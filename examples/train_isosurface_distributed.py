@@ -1,0 +1,22 @@
+"""End-to-end driver: distributed training of a ~100k-Gaussian isosurface
+model for a few hundred steps, with densification, checkpointing and final
+metrics. This is the paper's pipeline at CPU-friendly scale; pass
+--data-par/--model-par on a real mesh (or force host devices) to shard.
+
+  PYTHONPATH=src python examples/train_isosurface_distributed.py \
+      --dataset miranda --steps 300
+
+(Equivalent to `python -m repro.launch.train`, kept here as the runnable
+example entry point.)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += [
+            "--dataset", "miranda", "--volume-res", "48", "--max-points", "8000",
+            "--res", "64", "--steps", "300", "--views", "24", "--ckpt", "experiments/ckpts/miranda_demo",
+        ]
+    main()

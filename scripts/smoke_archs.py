@@ -1,0 +1,44 @@
+"""Dev smoke: one train-loss eval + one decode step for every arch family."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import api, lm
+
+B, S = 2, 32
+for aid in ARCH_IDS:
+    mod = get_arch(aid)
+    cfg = mod.smoke_config()
+    key = jax.random.key(0)
+    params = lm.init_params(cfg, key)
+    if cfg.arch_type == "whisper":
+        batch = {
+            "audio_embeds": jnp.zeros((B, cfg.n_audio_ctx, cfg.d_model), jnp.float32),
+            "tokens": jnp.zeros((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32),
+        }
+    elif cfg.arch_type == "vlm":
+        batch = {
+            "embeds": jax.random.normal(key, (B, S, cfg.d_model), jnp.float32),
+            "positions3": jnp.broadcast_to(jnp.arange(S)[None, :, None], (B, S, 3)).astype(jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32),
+        }
+    else:
+        batch = {
+            "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        }
+    try:
+        loss = jax.jit(lambda p, b: api.compute_loss(cfg, p, b))(params, batch)
+        ok_train = bool(jnp.isfinite(loss))
+        # decode
+        cache = api.init_cache(cfg, B, 64)
+        serve = api.make_serve_step(cfg)
+        logits, cache2 = jax.jit(serve)(params, cache, jnp.zeros((B, 1), jnp.int32), jnp.asarray(5, jnp.int32))
+        ok_dec = bool(jnp.all(jnp.isfinite(logits)))
+        print(f"{aid:26s} loss={float(loss):8.4f} train_ok={ok_train} decode_ok={ok_dec} logits={logits.shape}")
+    except Exception as e:
+        print(f"{aid:26s} FAIL: {type(e).__name__}: {str(e)[:300]}")

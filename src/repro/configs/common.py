@@ -1,0 +1,68 @@
+"""Shared input-shape definitions and ShapeDtypeStruct builders.
+
+``input_specs`` returns stand-ins for every model input (weak-type-correct,
+shardable, no device allocation) — exactly what jit(...).lower() consumes in
+the dry-run.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+class ShapeCase(NamedTuple):
+    seq_len: int
+    global_batch: int
+    kind: str   # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCase] = {
+    "train_4k": ShapeCase(4_096, 256, "train"),
+    "prefill_32k": ShapeCase(32_768, 32, "prefill"),
+    "decode_32k": ShapeCase(32_768, 128, "decode"),
+    "long_500k": ShapeCase(524_288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def lm_batch_specs(cfg: ModelConfig, shape: ShapeCase) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "whisper":
+        return {
+            "audio_embeds": _sds((b, cfg.n_audio_ctx, cfg.d_model), cfg.dtype),
+            "tokens": _sds((b, s), "int32"),
+            "labels": _sds((b, s), "int32"),
+        }
+    if cfg.arch_type == "vlm":
+        return {
+            "embeds": _sds((b, s, cfg.d_model), cfg.dtype),
+            "positions3": _sds((b, s, 3), "int32"),
+            "labels": _sds((b, s), "int32"),
+        }
+    return {"tokens": _sds((b, s), "int32"), "labels": _sds((b, s), "int32")}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeCase) -> dict:
+    """Specs for serve_step: one new token against a seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, b, s))
+    return {
+        "cache": cache,
+        "tokens": _sds((b, 1), "int32"),
+        "pos": _sds((), "int32"),
+    }
+
+
+def params_specs(cfg: ModelConfig, seed: int = 0):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    from repro.models import lm as L
+
+    return jax.eval_shape(lambda: L.init_params(cfg, jax.random.key(seed)))

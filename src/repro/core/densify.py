@@ -1,0 +1,172 @@
+"""Densification / pruning / shard rebalancing (3D-GS adaptive control).
+
+Runs host-side between jitted training segments (the Gaussian count changes,
+so each densify round triggers a re-jit — same structure as the CUDA
+pipeline, where densification is also an out-of-graph phase).
+
+The rebalance step is the TPU adaptation of Grendel's dynamic Gaussian
+redistribution: after clone/split/prune the global set is re-partitioned
+into equal shards (padded to a quantum with dead Gaussians) so every
+model-axis worker carries the same load.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core import gaussians as G
+from repro.core.config import GSConfig
+from repro.core.train import GSTrainState, init_state
+
+DEAD_LOGIT = -20.0  # sigmoid(-20) ~ 2e-9 < 1/255: never rasterized, zero grads
+
+
+class DensifyReport(NamedTuple):
+    n_before: int
+    n_cloned: int
+    n_split: int
+    n_pruned: int
+    n_after: int          # live count
+    n_padded: int         # allocated count after padding
+
+
+def _to_host(state: GSTrainState) -> dict:
+    return {
+        "params": jax.tree_util.tree_map(np.asarray, state.params),
+        "adam_m": jax.tree_util.tree_map(np.asarray, state.adam.m),
+        "adam_v": jax.tree_util.tree_map(np.asarray, state.adam.v),
+        "grad2d": np.asarray(state.grad2d_accum),
+        "vis": np.asarray(state.vis_count),
+        "maxr": np.asarray(state.max_radii),
+        "count": np.asarray(state.adam.count),
+        "step": np.asarray(state.step),
+    }
+
+
+def densify_and_rebalance(
+    state: GSTrainState,
+    cfg: GSConfig,
+    *,
+    n_shards: int,
+    scene_extent: float = 1.0,
+    rng: np.random.Generator | None = None,
+) -> tuple[GSTrainState, DensifyReport]:
+    """3D-GS adaptive density control + equal re-sharding.
+
+    clone: high view-space grad, small world size (under-reconstruction)
+    split: high view-space grad, large world size (over-reconstruction)
+    prune: opacity below threshold (or never visible since last round)
+    """
+    rng = rng or np.random.default_rng(0)
+    h = _to_host(state)
+    p = h["params"]
+    n0 = p.means.shape[0]
+
+    opac = 1.0 / (1.0 + np.exp(-p.opacity_logit))
+    live = opac > cfg.prune_opacity_thresh
+    avg_grad = h["grad2d"] / np.maximum(h["vis"], 1.0)
+    scales = np.exp(p.log_scales).max(axis=1)
+
+    hot = (avg_grad > cfg.densify_grad_thresh) & live & (h["vis"] > 0)
+    small = scales <= cfg.densify_scale_thresh * scene_extent
+    clone_mask = hot & small
+    split_mask = hot & ~small
+
+    # ---- clone: duplicate as-is (both copies receive future gradients)
+    clones = jax.tree_util.tree_map(lambda a: a[clone_mask], p)
+
+    # ---- split: two children sampled inside the parent, scales shrunk 1.6x
+    parents = jax.tree_util.tree_map(lambda a: a[split_mask], p)
+    n_split = parents.means.shape[0]
+    children = []
+    for _ in range(2):
+        noise = rng.normal(0.0, 1.0, (n_split, 3)).astype(np.float32) * np.exp(parents.log_scales)
+        R = np.asarray(G.quat_to_rotmat(parents.quats))
+        offs = np.einsum("nij,nj->ni", R, noise)
+        children.append(
+            G.GaussianModel(
+                means=parents.means + offs,
+                log_scales=parents.log_scales - np.log(1.6),
+                quats=parents.quats,
+                opacity_logit=parents.opacity_logit,
+                sh=parents.sh,
+            )
+        )
+
+    keep_mask = live & ~split_mask  # split parents are replaced by children
+    kept = jax.tree_util.tree_map(lambda a: a[keep_mask], p)
+    kept_m = jax.tree_util.tree_map(lambda a: a[keep_mask], h["adam_m"])
+    kept_v = jax.tree_util.tree_map(lambda a: a[keep_mask], h["adam_v"])
+
+    def cat(*trees):
+        return jax.tree_util.tree_map(lambda *xs: np.concatenate(xs, axis=0), *trees)
+
+    new_params = cat(kept, clones, children[0], children[1])
+    # fresh optimizer moments for newly created gaussians (3D-GS convention)
+    zeros_like_new = jax.tree_util.tree_map(
+        lambda a: np.zeros_like(a), cat(clones, children[0], children[1])
+    )
+    new_m = cat(kept_m, zeros_like_new)
+    new_v = cat(kept_v, zeros_like_new)
+
+    n_live = new_params.means.shape[0]
+    n_pruned = int(np.sum(~live))
+
+    # ---- rebalance: pad to shard quantum, shuffle for load uniformity
+    quantum = n_shards * cfg.pad_quantum
+    n_padded = int(np.ceil(n_live / quantum) * quantum)
+    pad = n_padded - n_live
+    perm = rng.permutation(n_live)  # uniform load across shard boundaries
+
+    def pad_field(a, fill=0.0):
+        out = np.concatenate([a[perm], np.full((pad,) + a.shape[1:], fill, a.dtype)], axis=0)
+        return out
+
+    new_params = G.GaussianModel(
+        means=pad_field(new_params.means, 1e6),
+        log_scales=pad_field(new_params.log_scales, -10.0),
+        quats=pad_field(new_params.quats, 0.0),
+        opacity_logit=pad_field(new_params.opacity_logit, DEAD_LOGIT),
+        sh=pad_field(new_params.sh),
+    )
+    # quats padding needs a valid rotation
+    new_params.quats[n_live:, 0] = 1.0
+    new_m = jax.tree_util.tree_map(lambda a: pad_field(a), new_m)
+    new_v = jax.tree_util.tree_map(lambda a: pad_field(a), new_v)
+
+    import jax.numpy as jnp
+
+    new_state = init_state(G.GaussianModel(*[jnp.asarray(x) for x in new_params]))
+    new_state = new_state._replace(
+        adam=new_state.adam._replace(
+            m=G.GaussianModel(*[jnp.asarray(x) for x in new_m]),
+            v=G.GaussianModel(*[jnp.asarray(x) for x in new_v]),
+            count=jnp.asarray(h["count"]),
+        ),
+        step=jnp.asarray(h["step"]),
+    )
+    report = DensifyReport(
+        n_before=n0,
+        n_cloned=int(clone_mask.sum()),
+        n_split=n_split,
+        n_pruned=n_pruned,
+        n_after=n_live,
+        n_padded=n_padded,
+    )
+    return new_state, report
+
+
+def reset_opacity(state: GSTrainState, *, ceiling: float = 0.01) -> GSTrainState:
+    """Periodic opacity reset (3D-GS: clamps opacity low to kill floaters).
+
+    Dead (padding) gaussians stay dead."""
+    import jax.numpy as jnp
+
+    logit = state.params.opacity_logit
+    ceil_logit = float(np.log(ceiling / (1 - ceiling)))
+    new = jnp.where(logit > ceil_logit, ceil_logit, logit)
+    new = jnp.where(logit <= DEAD_LOGIT + 1e-3, logit, new)
+    return state._replace(params=state.params._replace(opacity_logit=new))

@@ -1,0 +1,127 @@
+"""EWA projection of 3D Gaussians to screen-space splats.
+
+Produces the packed splat representation that the distributed pipeline
+communicates between Gaussian-owner shards and pixel-renderer shards.
+This is the key data-volume insight adapted from Grendel-GS: the projected
+2D state (PACKED_DIM=11 floats) is what crosses the interconnect, not the
+full 3D parameter state (11 + 3K·floats with SH).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gaussians as G
+
+# Packed splat layout (dim PACKED_DIM along last axis)
+MX, MY, CA, CB, CC, OP, CR, CG, CB_, DEPTH, RAD = range(11)
+PACKED_DIM = 11
+
+
+class Camera(NamedTuple):
+    """Pinhole camera. All leaves are arrays so cameras batch/vmap cleanly."""
+
+    viewmat: jax.Array  # (4,4) world -> camera
+    fx: jax.Array       # ()
+    fy: jax.Array       # ()
+    cx: jax.Array       # ()
+    cy: jax.Array       # ()
+
+    @property
+    def campos(self) -> jax.Array:
+        R = self.viewmat[:3, :3]
+        t = self.viewmat[:3, 3]
+        return -R.T @ t
+
+
+def look_at_camera(eye, target, up, fx, fy, cx, cy) -> Camera:
+    eye = jnp.asarray(eye, jnp.float32)
+    target = jnp.asarray(target, jnp.float32)
+    up = jnp.asarray(up, jnp.float32)
+    fwd = target - eye
+    fwd = fwd / (jnp.linalg.norm(fwd) + 1e-12)
+    right = jnp.cross(fwd, up)
+    right = right / (jnp.linalg.norm(right) + 1e-12)
+    down = jnp.cross(fwd, right)  # camera +y points down (image convention)
+    R = jnp.stack([right, down, fwd], axis=0)  # world -> cam rows
+    t = -R @ eye
+    viewmat = jnp.eye(4, dtype=jnp.float32).at[:3, :3].set(R).at[:3, 3].set(t)
+    return Camera(viewmat, jnp.float32(fx), jnp.float32(fy), jnp.float32(cx), jnp.float32(cy))
+
+
+def project(
+    g: G.GaussianModel,
+    cam: Camera,
+    *,
+    near: float = 0.01,
+    blur: float = 0.3,
+    max_radius: float = 1e4,
+) -> jax.Array:
+    """Project all Gaussians for one camera. Returns packed splats (N, 11).
+
+    Invalid (behind-camera) Gaussians get opacity 0, radius 0, depth +inf so a
+    depth sort pushes them to the back and compositing ignores them.
+    """
+    R = cam.viewmat[:3, :3]
+    tvec = cam.viewmat[:3, 3]
+    p_cam = g.means @ R.T + tvec  # (N,3)
+    x, y, z = p_cam[:, 0], p_cam[:, 1], p_cam[:, 2]
+    valid = z > near
+    zc = jnp.where(valid, z, 1.0)  # avoid div-by-0 in dead lanes
+
+    mean_x = cam.fx * x / zc + cam.cx
+    mean_y = cam.fy * y / zc + cam.cy
+
+    # EWA: cov2d = J W cov3d W^T J^T (+ low-pass blur)
+    cov3d = G.covariance3d(g)  # (N,3,3)
+    inv_z = 1.0 / zc
+    inv_z2 = inv_z * inv_z
+    # J rows: d(u)/d(p_cam), d(v)/d(p_cam)
+    J = jnp.zeros((g.n, 2, 3), jnp.float32)
+    J = J.at[:, 0, 0].set(cam.fx * inv_z)
+    J = J.at[:, 0, 2].set(-cam.fx * x * inv_z2)
+    J = J.at[:, 1, 1].set(cam.fy * inv_z)
+    J = J.at[:, 1, 2].set(-cam.fy * y * inv_z2)
+    JW = J @ R  # (N,2,3)
+    cov2d = JW @ cov3d @ jnp.swapaxes(JW, -1, -2)  # (N,2,2)
+    a = cov2d[:, 0, 0] + blur
+    b = cov2d[:, 0, 1]
+    c = cov2d[:, 1, 1] + blur
+
+    det = a * c - b * b
+    det = jnp.maximum(det, 1e-12)
+    inv_det = 1.0 / det
+    conic_a = c * inv_det
+    conic_b = -b * inv_det
+    conic_c = a * inv_det
+
+    mid = 0.5 * (a + c)
+    lam1 = mid + jnp.sqrt(jnp.maximum(mid * mid - det, 0.0))
+    radius = jnp.minimum(jnp.ceil(3.0 * jnp.sqrt(jnp.maximum(lam1, 0.0))), max_radius)
+
+    opac = G.opacities(g)
+    dirs = g.means - cam.campos
+    dirs = dirs / (jnp.linalg.norm(dirs, axis=-1, keepdims=True) + 1e-12)
+    rgb = jnp.clip(G.eval_sh(g.sh, dirs), 0.0, 1.0)
+
+    opac = jnp.where(valid, opac, 0.0)
+    radius = jnp.where(valid, radius, 0.0)
+    depth = jnp.where(valid, z, jnp.inf)
+
+    packed = jnp.stack(
+        [mean_x, mean_y, conic_a, conic_b, conic_c, opac, rgb[:, 0], rgb[:, 1], rgb[:, 2], depth, radius],
+        axis=-1,
+    )
+    return packed
+
+
+def sort_by_depth(packed: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Depth-sort packed splats front-to-back. Returns (sorted_packed, order).
+
+    The ordering is treated as non-differentiable (as in the CUDA 3D-GS
+    rasterizer): gradients flow through the gathered values, not the order.
+    """
+    order = jnp.argsort(jax.lax.stop_gradient(packed[:, DEPTH]))
+    return packed[order], order

@@ -1,0 +1,267 @@
+"""Distributed 3D-GS train step (the paper's contribution, JAX-native).
+
+One jitted step = shard_map over the (data, model) mesh:
+  project local Gaussian shard -> all_gather projected splats over "model"
+  -> depth sort -> tile-bin -> composite local pixel strip -> distributed
+  L1+D-SSIM -> backward (all_gather transposes to psum_scatter) -> fused
+  psum of packed grads over "data" -> sharded Adam update.
+
+The "replicated baseline" of the paper (single-GPU semantics, data-parallel
+only) is the same code on a mesh with model=1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.core import gaussians as G
+from repro.core import projection as P
+from repro.core import render as R
+from repro.core.config import GSConfig
+from repro.core.sharding import distributed_gs_loss
+from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.optim.schedules import expon_lr, grendel_lr_scale
+from repro.utils.tree import pack_pytree
+
+
+class GSTrainState(NamedTuple):
+    params: G.GaussianModel        # sharded over "model" (axis 0 of each leaf)
+    adam: AdamState                # sharded like params
+    step: jax.Array                # () int32, replicated
+    # densification statistics, sharded like params (per local Gaussian)
+    grad2d_accum: jax.Array        # (n,) sum of view-space grad norms
+    vis_count: jax.Array           # (n,) number of views seen in
+    max_radii: jax.Array           # (n,) max screen-space radius
+
+
+def init_state(params: G.GaussianModel) -> GSTrainState:
+    n = params.n
+    return GSTrainState(
+        params=params,
+        adam=adam_init(params),
+        step=jnp.zeros((), jnp.int32),
+        grad2d_accum=jnp.zeros((n,), jnp.float32),
+        vis_count=jnp.zeros((n,), jnp.float32),
+        max_radii=jnp.zeros((n,), jnp.float32),
+    )
+
+
+def state_shardings(mesh: Mesh, model_axis: str = "model"):
+    """NamedShardings for a GSTrainState on the given mesh."""
+    shard0 = NamedSharding(mesh, PS(model_axis))
+    rep = NamedSharding(mesh, PS())
+    return GSTrainState(
+        params=G.GaussianModel(*([shard0] * 5)),
+        adam=AdamState(G.GaussianModel(*([shard0] * 5)), G.GaussianModel(*([shard0] * 5)), rep),
+        step=rep,
+        grad2d_accum=shard0,
+        vis_count=shard0,
+        max_radii=shard0,
+    )
+
+
+def make_train_step(
+    mesh: Mesh,
+    cfg: GSConfig,
+    *,
+    data_axes: tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+):
+    """Build the jitted distributed train step for a fixed Gaussian count.
+
+    Returned fn: (state, cams: Camera batched (B,...), gt: (B,H,W,3)) ->
+    (state, metrics). Views are sharded over ``data_axes``; pixels strips over
+    ``model_axis`` when cfg.pixel_parallel (each device then holds both a
+    Gaussian shard and a pixel block — the Grendel worker model).
+    """
+    d = 1
+    for a in data_axes:
+        d *= mesh.shape[a]
+    m = mesh.shape[model_axis]
+    strip = cfg.pixel_parallel and m > 1
+    if strip:
+        assert cfg.img_h % (m * cfg.tile_h) == 0, "img_h must split into model-axis strips of whole tiles"
+    assert cfg.batch_size % d == 0, "global batch must divide data axes"
+    strip_h = cfg.img_h // m if strip else cfg.img_h
+    bg = jnp.asarray(cfg.bg, jnp.float32)
+    all_axes = tuple(data_axes) + (model_axis,)
+    # comm-schedule selection (EXPERIMENTS.md G3 ablation): the 3D-state
+    # gather wins whenever a worker renders >= 2 views of the same params
+    gather_mode = cfg.gather_mode
+    if gather_mode == "auto":
+        gather_mode = "params3d" if (cfg.batch_size // d) >= 2 and m > 1 else "projected"
+
+    def local_step(state: GSTrainState, cams: P.Camera, gt: jax.Array):
+        params = state.params
+        n_local = params.means.shape[0]
+        b_local = gt.shape[0]
+
+        def loss_fn(p, probe):
+            if gather_mode == "params3d":
+                # ---- beyond-paper comm schedule: all-gather the 3D state
+                # ONCE per step (14+3K floats/gaussian) instead of 11-float
+                # projected splats PER VIEW; projection recomputed locally.
+                # Wins whenever B_local >= 2 (§Perf GS iteration G3).
+                flat3d = jnp.concatenate(
+                    [p.means, p.log_scales, p.quats, p.opacity_logit[:, None],
+                     p.sh.reshape(n_local, -1)], axis=1,
+                )
+                flat_all = jax.lax.all_gather(flat3d, model_axis, axis=0, tiled=True)
+                n_total = flat_all.shape[0]
+                sh_k = p.sh.shape[1]
+                p_full = G.GaussianModel(
+                    means=flat_all[:, 0:3],
+                    log_scales=flat_all[:, 3:6],
+                    quats=flat_all[:, 6:10],
+                    opacity_logit=flat_all[:, 10],
+                    sh=flat_all[:, 11:].reshape(n_total, sh_k, 3),
+                )
+                gathered = jax.vmap(lambda cam: P.project(p_full, cam))(cams)  # (B_l,N,11)
+                gathered = gathered + jnp.pad(probe, ((0, 0), (0, 0), (0, P.PACKED_DIM - 2)))
+                shard0 = jax.lax.axis_index(model_axis) * n_local
+                radii_local = jax.lax.dynamic_slice_in_dim(
+                    gathered[..., P.RAD], shard0, n_local, axis=1
+                )  # own shard's visibility stats
+            else:
+                # ---- paper-faithful (Grendel): project own shard, gather 2D
+                def proj_one(cam):
+                    return P.project(p, cam)
+
+                packed = jax.vmap(proj_one)(cams)                  # (B_l, n_local, 11)
+                packed = packed + jnp.pad(probe, ((0, 0), (0, 0), (0, P.PACKED_DIM - 2)))
+                radii_local = packed[..., P.RAD]                   # (B_l, n_local)
+                gathered = jax.lax.all_gather(packed, model_axis, axis=1, tiled=True)
+
+            if strip:
+                off = (jax.lax.axis_index(model_axis) * strip_h).astype(jnp.float32)
+                gathered = gathered.at[..., P.MY].add(-off)
+
+            def render_one(pk):
+                pk_sorted, _ = P.sort_by_depth(pk)
+                img, _ = R.render_packed(
+                    pk_sorted,
+                    img_h=strip_h,
+                    img_w=cfg.img_w,
+                    tile_h=cfg.tile_h,
+                    tile_w=cfg.tile_w,
+                    k_per_tile=cfg.k_per_tile,
+                    bg=bg,
+                    backend=cfg.backend,
+                    binning=cfg.binning,
+                )
+                return img
+
+            imgs = jax.vmap(render_one)(gathered)                  # (B_l, strip_h, W, 3)
+            loss = distributed_gs_loss(
+                imgs,
+                gt,
+                lam=cfg.lambda_dssim,
+                strip_axis=model_axis if strip else None,
+                reduce_axes=all_axes,
+            )
+            return loss, radii_local
+
+        probe_n = n_local * m if gather_mode == "params3d" else n_local
+        probe = jnp.zeros((b_local, probe_n, 2), jnp.float32)
+        (loss, radii), (grads, probe_grad) = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+            params, probe
+        )
+
+        # ---- the paper's fused all-reduce: ONE collective over packed grads
+        flat, unpack = pack_pytree(grads)
+        flat = jax.lax.psum(flat, data_axes)
+        grads = unpack(flat)
+        # view-space positional gradient stats for densification
+        g2d = jnp.sqrt(jnp.sum(probe_grad * probe_grad, axis=-1) + 1e-20)  # (B_l, probe_n)
+        if gather_mode == "params3d":
+            g2d = jax.lax.dynamic_slice_in_dim(
+                g2d, jax.lax.axis_index(model_axis) * n_local, n_local, axis=1
+            )
+        g2d = jax.lax.psum(jnp.sum(g2d, axis=0), data_axes)
+        visible = radii > 0.0
+        vis = jax.lax.psum(jnp.sum(visible.astype(jnp.float32), axis=0), data_axes)
+        maxr = jax.lax.pmax(jnp.max(radii, axis=0), data_axes)
+
+        # ---- sharded Adam update (per-field LRs; Grendel sqrt-batch scaling)
+        scale = grendel_lr_scale(cfg.batch_size) if cfg.grendel_sqrt_lr_scaling else 1.0
+        lr_means = expon_lr(
+            state.step, lr_init=cfg.lr_means_init, lr_final=cfg.lr_means_final, max_steps=cfg.max_steps
+        )
+        lrs = G.GaussianModel(
+            means=lr_means * scale,
+            log_scales=cfg.lr_scales * scale,
+            quats=cfg.lr_quats * scale,
+            opacity_logit=cfg.lr_opacity * scale,
+            sh=cfg.lr_sh * scale,
+        )
+        new_params, new_adam = adam_update(grads, state.adam, params, lrs)
+
+        new_state = GSTrainState(
+            params=new_params,
+            adam=new_adam,
+            step=state.step + 1,
+            grad2d_accum=state.grad2d_accum + g2d,
+            vis_count=state.vis_count + vis,
+            max_radii=jnp.maximum(state.max_radii, maxr),
+        )
+        metrics = {"loss": loss}
+        return new_state, metrics
+
+    st_specs = GSTrainState(
+        params=G.GaussianModel(*([PS(model_axis)] * 5)),
+        adam=AdamState(
+            G.GaussianModel(*([PS(model_axis)] * 5)),
+            G.GaussianModel(*([PS(model_axis)] * 5)),
+            PS(),
+        ),
+        step=PS(),
+        grad2d_accum=PS(model_axis),
+        vis_count=PS(model_axis),
+        max_radii=PS(model_axis),
+    )
+    cam_spec = P.Camera(*([PS(data_axes)] * 5))
+    gt_spec = PS(data_axes, model_axis) if strip else PS(data_axes)
+
+    stepped = shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(st_specs, cam_spec, gt_spec),
+        out_specs=(st_specs, {"loss": PS()}),
+        check_vma=False,
+    )
+    return jax.jit(stepped)
+
+
+def make_eval_render(mesh: Mesh, cfg: GSConfig, *, model_axis: str = "model"):
+    """Distributed eval render of one view: full image, replicated output."""
+
+    def local(params: G.GaussianModel, cam: P.Camera):
+        packed = P.project(params, cam)
+        gathered = jax.lax.all_gather(packed, model_axis, axis=0, tiled=True)
+        pk_sorted, _ = P.sort_by_depth(gathered)
+        img, t = R.render_packed(
+            pk_sorted,
+            img_h=cfg.img_h,
+            img_w=cfg.img_w,
+            tile_h=cfg.tile_h,
+            tile_w=cfg.tile_w,
+            k_per_tile=cfg.k_per_tile,
+            bg=jnp.asarray(cfg.bg, jnp.float32),
+            backend=cfg.backend,
+            binning=cfg.binning,
+        )
+        return img, t
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(G.GaussianModel(*([PS(model_axis)] * 5)), P.Camera(*([PS()] * 5))),
+        out_specs=(PS(), PS()),
+        check_vma=False,
+    )
+    return jax.jit(fn)

@@ -1,0 +1,3 @@
+from repro.data.views import ViewDataset
+
+__all__ = ["ViewDataset"]

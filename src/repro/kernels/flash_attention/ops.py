@@ -1,0 +1,49 @@
+"""jit wrapper: GQA head expansion, padding, custom_vjp (oracle backward)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _k
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0, backend="pallas"):
+    """q: (B,S,H,hd); k/v: (B,Skv,Hkv,hd). Returns (B,S,H,hd).
+
+    backend="ref" or Skv > 8192 falls back to the chunked-scan oracle.
+    """
+    b, s, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if backend == "ref" or skv > 8192:
+        return attention_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+    group = h // hkv
+
+    @jax.custom_vjp
+    def fwd(q, k, v):
+        pad_q = (-s) % _k.BQ
+        kf = jnp.repeat(k, group, axis=2)
+        vf = jnp.repeat(v, group, axis=2)
+        qq = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        # (B,S,H,hd) -> (B*H, S, hd)
+        def to_bh(t):
+            return t.transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+
+        run = _k.make_flash(b * h, s + pad_q, skv, hd, causal, window, q_offset, str(q.dtype))
+        o = run(to_bh(qq), to_bh(kf), to_bh(vf))
+        return o.reshape(b, h, s + pad_q, hd).transpose(0, 2, 1, 3)[:, :s]
+
+    def fwd_fwd(q, k, v):
+        return fwd(q, k, v), (q, k, v)
+
+    def fwd_bwd(res, ct):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda a, b_, c: attention_ref(a, b_, c, causal=causal, window=window, q_offset=q_offset),
+            q, k, v,
+        )
+        return vjp(ct)
+
+    fwd.defvjp(fwd_fwd, fwd_bwd)
+    return fwd(q, k, v)

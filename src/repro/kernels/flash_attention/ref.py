@@ -1,0 +1,6 @@
+"""Oracle: the production chunked (online-softmax) attention."""
+from repro.models.common import chunked_attention
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    return chunked_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)

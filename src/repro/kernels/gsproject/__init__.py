@@ -1,0 +1,3 @@
+from repro.kernels.gsproject.ops import project_packed
+
+__all__ = ["project_packed"]

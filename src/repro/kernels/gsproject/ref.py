@@ -1,0 +1,10 @@
+"""Oracle for the projection kernel = the production jnp projection math."""
+from __future__ import annotations
+
+from repro.core import gaussians as G
+from repro.core import projection as P
+
+
+def project_ref(g: G.GaussianModel, cam: P.Camera, *, near: float = 0.01):
+    """(N,11) packed splats — the exact math the Pallas kernel must match."""
+    return P.project(g, cam, near=near)

@@ -1,0 +1,3 @@
+from repro.kernels.tile_raster.ops import rasterize_tiles
+
+__all__ = ["rasterize_tiles"]

@@ -1,0 +1,144 @@
+"""Collective-byte extraction from compiled HLO text (for §Roofline).
+
+cost_analysis() has FLOPs and HBM bytes but not collective traffic, so we
+parse the post-SPMD HLO. Two subtleties handled here:
+
+1. Collectives inside `while` bodies (layer scans) execute once per trip —
+   each computation gets a trip-count multiplier recovered from the while
+   condition's comparison constant (nested whiles multiply).
+2. Per-chip link traffic uses the standard ring formulas:
+     all-gather         result_bytes * (n-1)/n      (result is the gathered)
+     all-reduce         2 * bytes * (n-1)/n
+     reduce-scatter     result_bytes * (n-1)        (result is the scattered)
+     all-to-all         bytes * (n-1)/n
+     collective-permute bytes
+"""
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*condition=%?([\w.\-]+).*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+_COLL_LINE_RE = re.compile(
+    r"=\s*(.*?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\("
+)
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and (line.startswith("ENTRY") or line.startswith("%") or line.startswith("  ") is False):
+            cur = m.group(1)
+            if line.strip().startswith("ENTRY"):
+                cur = "ENTRY"
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _trip_counts(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Multiplier per computation (ENTRY=1; while bodies *= trip count)."""
+    # trip count of a while = the max s32 constant in its condition computation
+    edges: list[tuple[str, str, float]] = []  # (parent, body, trips)
+    for parent, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                consts = [int(c) for cl in comps.get(cond, []) for c in _CONST_RE.findall(cl)]
+                trips = float(max(consts)) if consts else 1.0
+                edges.append((parent, body, trips))
+                edges.append((parent, cond, trips))
+    mult = {name: (1.0 if name == "ENTRY" else 0.0) for name in comps}
+    # also seed computations referenced via calls/fusions from ENTRY at 1.0:
+    # conservatively, any computation never reached keeps multiplier from edges;
+    # non-while computations (fusions) inherit their caller implicitly because
+    # XLA inlines collectives only at computation level via calls — handle calls:
+    call_re = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+    for parent, lines in comps.items():
+        for line in lines:
+            if "while(" in line:
+                continue
+            for callee in call_re.findall(line):
+                edges.append((parent, callee, 1.0))
+    for _ in range(12):  # fixpoint over nesting depth
+        changed = False
+        for parent, child, trips in edges:
+            if parent in mult and child in mult:
+                cand = mult[parent] * trips
+                if cand > mult[child]:
+                    mult[child] = cand
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_stats(hlo_text: str) -> dict:
+    comps = _split_computations(hlo_text)
+    mult = _trip_counts(comps)
+    stats = {c: {"count": 0.0, "result_bytes": 0.0, "moved_bytes": 0.0} for c in COLLECTIVES}
+    for name, lines in comps.items():
+        w = mult.get(name, 1.0)
+        if w == 0.0:
+            w = 1.0  # unreached computations: count once, conservative
+        for line in lines:
+            m = _COLL_LINE_RE.search(line)
+            if not m or m.group(3) == "-done":
+                continue
+            op = m.group(2)
+            nbytes = _shape_bytes(m.group(1))
+            n = max(_group_size(line), 2)
+            if op == "all-gather":
+                moved = nbytes * (n - 1) / n
+            elif op == "all-reduce":
+                moved = 2 * nbytes * (n - 1) / n
+            elif op == "reduce-scatter":
+                moved = nbytes * (n - 1)
+            elif op == "all-to-all":
+                moved = nbytes * (n - 1) / n
+            else:
+                moved = nbytes
+            s = stats[op]
+            s["count"] += w
+            s["result_bytes"] += w * nbytes
+            s["moved_bytes"] += w * moved
+    stats["total_moved_bytes"] = sum(s["moved_bytes"] for s in stats.values() if isinstance(s, dict))
+    return stats

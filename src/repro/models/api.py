@@ -1,0 +1,243 @@
+"""Public model API: init / train_step / serve_step factories.
+
+These are the functions the launcher jits (and the dry-run lowers) — one
+code path for smoke tests (1 CPU device) and the 512-chip mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models import lm as L
+from repro.models.config import ModelConfig
+from repro.models.sharding import lshard
+
+
+# ------------------------------------------------------------- cache init
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None) -> dict:
+    dtype = dtype or C.dtype_of(cfg)
+    unit, n_units, rem = L.layer_plan(cfg)
+    cache: dict[str, Any] = {}
+
+    def one(kind):
+        return L._layer_cache_init(cfg, kind, batch, cache_len, dtype)
+
+    if cfg.arch_type == "zamba":
+        period = max(cfg.attn_every, 1)
+
+        # stacked mamba caches for the double-unit scan + per-invocation attn caches
+        def stack_caches(n, inner):
+            return jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), inner)
+
+        cache["units"] = {
+            "a": stack_caches(n_units, stack_caches(period, one("mamba"))),
+            "b": stack_caches(n_units, stack_caches(period, one("mamba"))),
+            "attn_a": stack_caches(n_units, one("attn_global")),
+            "attn_b": stack_caches(n_units, one("attn_global")),
+        }
+        cache["rem"] = [one("mamba") for _ in rem]
+        n_rem_attn = len(rem) // period
+        cache["rem_attn"] = [one("attn_global") for _ in range(n_rem_attn)]
+        return cache
+
+    if "units" in _params_layout(cfg):
+        cache["units"] = {
+            f"slot{i}": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n_units,) + x.shape), one(kind)
+            )
+            for i, kind in enumerate(unit)
+        }
+    else:
+        cache["flat"] = [one(unit[i % len(unit)]) for i in range(n_units * len(unit))]
+    cache["rem"] = [one(k) for k in rem]
+    if cfg.arch_type == "whisper":
+        # cross-attention K/V computed once at prefill from the encoder output
+        cache["cross_k"] = [
+            jnp.zeros((batch, cfg.n_audio_ctx, cfg.n_kv_heads, cfg.hd), dtype) for _ in range(cfg.n_layers)
+        ]
+        cache["cross_v"] = [
+            jnp.zeros((batch, cfg.n_audio_ctx, cfg.n_kv_heads, cfg.hd), dtype) for _ in range(cfg.n_layers)
+        ]
+    return cache
+
+
+def _params_layout(cfg: ModelConfig) -> set[str]:
+    unit, n_units, _ = L.layer_plan(cfg)
+    if cfg.arch_type == "zamba" and cfg.scan_layers:
+        return {"units"}
+    if cfg.scan_layers and n_units > 1:
+        return {"units"}
+    return {"flat_layers"}
+
+
+# ------------------------------------------------------------- decode stack
+def backbone_decode(cfg: ModelConfig, params, cache, x, pos, mrope_positions=None):
+    unit, n_units, rem = L.layer_plan(cfg)
+
+    if cfg.arch_type == "zamba":
+        return _zamba_decode(cfg, params, cache, x, pos)
+
+    if "units" in params:
+        def body(xc, inp):
+            unit_params, unit_cache = inp
+            new_caches = {}
+            for i, kind in enumerate(unit):
+                xc, nc = L._layer_decode(
+                    cfg, kind, unit_params[f"slot{i}"], xc, unit_cache[f"slot{i}"], pos, mrope_positions
+                )
+                new_caches[f"slot{i}"] = nc
+            return xc, new_caches
+
+        x, new_unit_caches = jax.lax.scan(body, x, (params["units"], cache["units"]))
+        cache = dict(cache, units=new_unit_caches)
+    else:
+        new_flat = []
+        for i, lp in enumerate(params.get("flat_layers", [])):
+            if cfg.arch_type == "whisper":
+                x, nc = L._layer_decode(cfg, unit[i % len(unit)], lp, x, cache["flat"][i], pos)
+                # cross attention against precomputed encoder K/V
+                cp = params["cross_layers"][i]
+                x = L._cross_attend(cfg, cp, x, cache["cross_k"][i], cache["cross_v"][i])
+            else:
+                x, nc = L._layer_decode(cfg, unit[i % len(unit)], lp, x, cache["flat"][i], pos)
+            new_flat.append(nc)
+        cache = dict(cache, flat=new_flat)
+    new_rem = []
+    for (kind, lp), rc in zip(zip(rem, params["rem_layers"]), cache["rem"]):
+        x, nc = L._layer_decode(cfg, kind, lp, x, rc, pos, mrope_positions)
+        new_rem.append(nc)
+    cache = dict(cache, rem=new_rem)
+    return C.rmsnorm(params["final_norm"], x, cfg.norm_eps), cache
+
+
+def _zamba_decode(cfg, params, cache, x, pos):
+    period = max(cfg.attn_every, 1)
+    sa, sb = params["shared_attn"]
+
+    def half(xc, unit_params, unit_cache, shared, attn_cache):
+        def body(carry, inp):
+            xc2 = carry
+            lp, lc = inp
+            xc2, nc = L._layer_decode(cfg, "mamba", lp, xc2, lc, pos)
+            return xc2, nc
+
+        xc, ncs = jax.lax.scan(body, xc, (unit_params, unit_cache))
+        xc, na = L._layer_decode(cfg, "attn_global", shared, xc, attn_cache, pos)
+        return xc, ncs, na
+
+    def double(xc, inp):
+        up, uc = inp
+        xc, nca, naa = half(xc, up["a"], uc["a"], sa, uc["attn_a"])
+        xc, ncb, nab = half(xc, up["b"], uc["b"], sb, uc["attn_b"])
+        return xc, {"a": nca, "b": ncb, "attn_a": naa, "attn_b": nab}
+
+    x, new_units = jax.lax.scan(double, x, (params["units"], cache["units"]))
+    new_rem, new_rem_attn = [], []
+    ai = 0
+    for i, (lp, rc) in enumerate(zip(params["rem_layers"], cache["rem"])):
+        x, nc = L._layer_decode(cfg, "mamba", lp, x, rc, pos)
+        new_rem.append(nc)
+        if (i + 1) % period == 0 and ai < len(cache["rem_attn"]):
+            x, na = L._layer_decode(cfg, "attn_global", sa, x, cache["rem_attn"][ai], pos)
+            new_rem_attn.append(na)
+            ai += 1
+    cache = dict(cache, units=new_units, rem=new_rem, rem_attn=new_rem_attn)
+    return C.rmsnorm(params["final_norm"], x, cfg.norm_eps), cache
+
+
+# ------------------------------------------------------------- optimizer
+def adamw_init(params):
+    z = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.copy, z), "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt, *, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    count = opt["count"] + 1
+    c = count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / (1 - b1**c)
+        vhat = v2 / (1 - b2**c)
+        step = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt["m"], opt["v"])
+    leaves, td = jax.tree_util.tree_flatten(out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    p2 = jax.tree_util.tree_unflatten(td, [l[0] for l in leaves])
+    m2 = jax.tree_util.tree_unflatten(td, [l[1] for l in leaves])
+    v2 = jax.tree_util.tree_unflatten(td, [l[2] for l in leaves])
+    return p2, {"m": m2, "v": v2, "count": count}
+
+
+# ------------------------------------------------------------- train step
+def compute_loss(cfg: ModelConfig, params, batch) -> jax.Array:
+    if cfg.arch_type == "whisper":
+        x = L.whisper_train(cfg, params, batch["audio_embeds"], batch["tokens"])
+    elif cfg.arch_type == "vlm":
+        x = batch["embeds"].astype(C.dtype_of(cfg))
+        x = lshard(x, "batch", "seq", "embed")
+        x = L.backbone_train(cfg, params, x, None, mrope_positions=batch["positions3"])
+    else:
+        tokens = batch["tokens"]
+        x = C.embed_lookup(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+        x = L.backbone_train(cfg, params, x, positions)
+    return C.chunked_ce_loss(params["embed"], x, batch["labels"])
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4):
+    def train_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(lambda p: compute_loss(cfg, p, batch))(params)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, {"loss": loss}
+
+    return train_step
+
+
+# ------------------------------------------------------------- prefill step
+def make_prefill_step(cfg: ModelConfig):
+    """Full forward over the prompt, returning last-position logits.
+
+    (Cache population is the same compute plus pure HBM traffic — counted
+    analytically in the roofline's memory term; see DESIGN.md.)
+    """
+
+    def prefill_step(params, batch):
+        if cfg.arch_type == "whisper":
+            x = L.whisper_train(cfg, params, batch["audio_embeds"], batch["tokens"])
+        elif cfg.arch_type == "vlm":
+            x = lshard(batch["embeds"].astype(C.dtype_of(cfg)), "batch", "seq", "embed")
+            x = L.backbone_train(cfg, params, x, None, mrope_positions=batch["positions3"])
+        else:
+            tokens = batch["tokens"]
+            x = C.embed_lookup(params["embed"], tokens)
+            positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+            x = L.backbone_train(cfg, params, x, positions)
+        return C.lm_logits(params["embed"], x[:, -1:])
+
+    return prefill_step
+
+
+# ------------------------------------------------------------- serve step
+def make_serve_step(cfg: ModelConfig):
+    """One-token decode step against a KV/state cache."""
+
+    def serve_step(params, cache, tokens, pos):
+        # tokens: (B,1) int32; pos: () int32
+        x = C.embed_lookup(params["embed"], tokens)
+        mrope = None
+        if cfg.arch_type == "vlm":
+            p3 = jnp.broadcast_to(pos, (tokens.shape[0], 1, 3)).astype(jnp.int32)
+            mrope = p3
+        x, cache = backbone_decode(cfg, params, cache, x, pos, mrope_positions=mrope)
+        logits = C.lm_logits(params["embed"], x)
+        return logits, cache
+
+    return serve_step

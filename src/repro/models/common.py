@@ -1,0 +1,285 @@
+"""Shared transformer building blocks (pure-function style, param pytrees).
+
+Everything is written against logical-axis sharding annotations (lshard) so
+the same code runs single-device in smoke tests and on the 512-chip mesh in
+the dry-run. Attention is chunked (online-softmax, flash-style in pure JAX)
+so 32k prefill never materializes an S x S score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import lshard
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+# ------------------------------------------------------------------ RMSNorm
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B,S,H,hd), positions: (B,S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float, sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL M-RoPE. positions: (B,S,3) [t,h,w]; sections sum to hd/2."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)  # (half,)
+    # each rotary frequency slot takes its position stream by section
+    sec_id = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )  # (half,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None], positions.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # (B,S,half)
+    ang = pos * freqs[None, None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def attn_init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _qkv(p, cfg, x, positions, mrope_positions=None):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = lshard(q, "batch", "seq", "heads", None)
+    k = lshard(k, "batch", "seq", "kv_heads", None)
+    v = lshard(v, "batch", "seq", "kv_heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(
+    q: jax.Array,   # (B,S,H,hd)
+    k: jax.Array,   # (B,Skv,Hkv,hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style chunked attention (online softmax over KV chunks).
+
+    Never materializes (S, Skv); peak live score block is (B,H,S,chunk).
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode: Skv-1).
+    """
+    b, s, h, hd = q.shape
+    skv = k.shape[1]
+    hkv = k.shape[2]
+    group = h // hkv
+    scale = 1.0 / np.sqrt(hd)
+
+    qf = (q * scale).astype(jnp.float32).transpose(0, 2, 1, 3)  # (B,H,S,hd)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)            # (B,Hkv,Skv,hd)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    # expand kv heads to full heads (GQA)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+
+    chunk = min(chunk, skv)
+    pad = (-skv) % chunk
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = kf.shape[2] // chunk
+    kf = kf.reshape(b, h, nc, chunk, hd)
+    vf = vf.reshape(b, h, nc, chunk, hd)
+
+    q_pos = q_offset + jnp.arange(s)
+
+    @jax.checkpoint  # recompute per-chunk probabilities in the backward pass
+    def step(carry, inputs):
+        m, l, acc = carry
+        kc, vc, ci = inputs
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kc)  # (B,H,S,chunk)
+        mask = kv_pos[None, :] < skv  # padding
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kf.transpose(2, 0, 1, 3, 4), vf.transpose(2, 0, 1, 3, 4), jnp.arange(nc))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,S,H,hd)
+
+
+def attention_train(p, cfg, x, positions, *, window=None, causal=True, mrope_positions=None):
+    b, s, d = x.shape
+    q, k, v = _qkv(p, cfg, x, positions, mrope_positions)
+    out = chunked_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+    return lshard(out @ p["wo"], "batch", "seq", "embed")
+
+
+def attention_decode(p, cfg, x, cache_k, cache_v, pos, *, window=None, mrope_positions=None):
+    """One-token decode. cache_k/v: (B, Scache, Hkv, hd) ring or linear buffer.
+
+    pos: () int32 absolute position of the new token. Returns (out, new_k, new_v).
+    """
+    b = x.shape[0]
+    hd = cfg.hd
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions, mrope_positions)
+    s_cache = cache_k.shape[1]
+    slot = (pos % s_cache).astype(jnp.int32) if window is not None else jnp.minimum(pos, s_cache - 1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    kf = cache_k.astype(jnp.float32)
+    vf = cache_v.astype(jnp.float32)
+    group = cfg.n_heads // cfg.n_kv_heads
+    qf = (q * (1.0 / np.sqrt(hd))).astype(jnp.float32)  # (B,1,H,hd)
+    qf = qf.reshape(b, cfg.n_kv_heads, group, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, kf)      # (B,Hkv,g,Scache)
+    idx = jnp.arange(s_cache)
+    if window is not None:
+        # ring buffer: slot i holds the largest absolute position p' <= pos
+        # with p' % s_cache == i; valid if within the window
+        abs_pos = pos - ((pos - idx) % s_cache)
+        mask = (abs_pos >= 0) & (abs_pos <= pos) & (pos - abs_pos < window)
+    else:
+        mask = idx <= pos
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, vf).reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    return lshard(out @ p["wo"], "batch", "seq", "embed"), cache_k, cache_v
+
+
+# -------------------------------------------------------------------- SwiGLU
+def mlp_init(key, d, ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], (d, ff), dtype),
+        "wg": dense_init(ks[1], (d, ff), dtype),
+        "wo": dense_init(ks[2], (ff, d), dtype),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = lshard(h, "batch", "seq", "ff")
+    return lshard(h @ p["wo"], "batch", "seq", "embed")
+
+
+# ----------------------------------------------------------------- LM pieces
+def embed_init(key, vocab, d, dtype):
+    return {"embedding": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed_lookup(p, tokens):
+    return lshard(p["embedding"][tokens], "batch", "seq", "embed")
+
+
+def lm_logits(p_embed, x):
+    return lshard(x @ p_embed["embedding"].T, "batch", "seq", "vocab")
+
+
+def chunked_ce_loss(p_embed, x, labels, *, chunk: int = 512, z_loss: float = 0.0):
+    """Cross-entropy over seq chunks so (B,S,V) logits never fully materialize."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = x.shape[1] // chunk
+    xs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # never keep (B,chunk,V) logits across chunks for backward
+    def step(carry, inp):
+        tot, cnt = carry
+        xc, lc = inp
+        logits = lm_logits(p_embed, xc).astype(jnp.float32)  # (B,chunk,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = lc >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        if z_loss:
+            nll = nll + jnp.where(valid, z_loss * lse**2, 0.0)
+        return (tot + jnp.sum(nll), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xs, ls))
+    return tot / jnp.maximum(cnt, 1)

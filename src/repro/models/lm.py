@@ -1,0 +1,304 @@
+"""Model assembly for all assigned architecture families.
+
+A model = embedding + a sequence of *segments*. Homogeneous runs of layers
+are stacked (leading L dim) and executed with lax.scan (keeps HLO small for
+80-layer configs); heterogeneous patterns (gemma3 local:global, zamba2
+shared-attention) scan over repeating *units* with any remainder layers
+applied unstacked.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as C
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.config import ModelConfig
+from repro.models.sharding import lshard
+
+
+# ------------------------------------------------------------ block defs
+def _layer_init(cfg: ModelConfig, kind: str, key, dtype):
+    d = cfg.d_model
+    if kind in ("attn_global", "attn_local"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {"ln1": C.rmsnorm_init(d, dtype), "attn": C.attn_init(k1, cfg, dtype)}
+        p["ln2"] = C.rmsnorm_init(d, dtype)
+        if cfg.is_moe:
+            p["moe"] = MOE.moe_init(k2, cfg, dtype)
+        else:
+            p["mlp"] = C.mlp_init(k3, d, cfg.d_ff, dtype)
+        return p
+    if kind == "mamba":
+        return {"ln1": C.rmsnorm_init(d, dtype), "mamba": SSM.mamba2_init(key, cfg, dtype)}
+    if kind == "mlstm":
+        return {"ln1": C.rmsnorm_init(d, dtype), "mlstm": XL.mlstm_init(key, cfg, dtype)}
+    if kind == "slstm":
+        return {"ln1": C.rmsnorm_init(d, dtype), "slstm": XL.slstm_init(key, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _layer_train(cfg: ModelConfig, kind: str, p, x, positions, mrope_positions=None):
+    if kind in ("attn_global", "attn_local"):
+        window = cfg.sliding_window if kind == "attn_local" else None
+        h = C.attention_train(
+            p["attn"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+            window=window, mrope_positions=mrope_positions,
+        )
+        x = x + h
+        y = C.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _aux = MOE.moe_apply(p["moe"], cfg, y)
+        else:
+            y = C.mlp(p["mlp"], y)
+        return x + y
+    if kind == "mamba":
+        return x + SSM.mamba2_train(p["mamba"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps))
+    if kind == "mlstm":
+        return x + XL.mlstm_train(p["mlstm"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps))
+    if kind == "slstm":
+        return x + XL.slstm_train(p["slstm"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps))
+    raise ValueError(kind)
+
+
+def _layer_decode(cfg: ModelConfig, kind: str, p, x, cache, pos, mrope_positions=None):
+    """cache: per-layer dict. Returns (x, new_cache)."""
+    if kind in ("attn_global", "attn_local"):
+        window = cfg.sliding_window if kind == "attn_local" else None
+        h, ck, cv = C.attention_decode(
+            p["attn"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps), cache["k"], cache["v"], pos,
+            window=window, mrope_positions=mrope_positions,
+        )
+        x = x + h
+        y = C.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = MOE.moe_apply(p["moe"], cfg, y)
+        else:
+            y = C.mlp(p["mlp"], y)
+        return x + y, {"k": ck, "v": cv}
+    if kind == "mamba":
+        h, nc = SSM.mamba2_decode(p["mamba"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps), cache)
+        return x + h, nc
+    if kind == "mlstm":
+        h, nc = XL.mlstm_decode(p["mlstm"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps), cache)
+        return x + h, nc
+    if kind == "slstm":
+        h, nc = XL.slstm_decode(p["slstm"], cfg, C.rmsnorm(p["ln1"], x, cfg.norm_eps), cache)
+        return x + h, nc
+    raise ValueError(kind)
+
+
+def _layer_cache_init(cfg: ModelConfig, kind: str, batch: int, cache_len: int, dtype):
+    if kind in ("attn_global", "attn_local"):
+        length = min(cache_len, cfg.sliding_window) if (kind == "attn_local" and cfg.sliding_window) else cache_len
+        hd = cfg.hd
+        return {
+            "k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        }
+    if kind == "mamba":
+        return SSM.mamba2_cache_init(cfg, batch, dtype)
+    if kind == "mlstm":
+        return XL.mlstm_cache_init(cfg, batch)
+    if kind == "slstm":
+        return XL.slstm_cache_init(cfg, batch)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------ pattern plan
+PATTERN_KINDS = {"L": "attn_local", "G": "attn_global", "M": "mlstm", "S": "slstm", "D": "mamba"}
+
+
+def layer_plan(cfg: ModelConfig) -> tuple[list[str], int, list[str]]:
+    """Returns (unit kinds, n_units, remainder kinds)."""
+    if cfg.arch_type == "xlstm":
+        pattern = [PATTERN_KINDS[c] for c in cfg.xlstm_pattern]
+    elif cfg.arch_type == "zamba":
+        # scanned double-units of 2*attn_every mamba layers (+2 shared attn)
+        period = max(cfg.attn_every, 1)
+        n_double = cfg.n_layers // (2 * period)
+        rem = ["mamba"] * (cfg.n_layers - n_double * 2 * period)
+        return ["mamba"] * (2 * period), n_double, rem
+    elif cfg.layer_pattern:
+        pattern = [PATTERN_KINDS[c] for c in cfg.layer_pattern]
+    else:
+        pattern = ["attn_global"]
+    n_units = cfg.n_layers // len(pattern)
+    rem = [pattern[i] for i in range(cfg.n_layers - n_units * len(pattern))]
+    return pattern, n_units, rem
+
+
+# ------------------------------------------------------------ init
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = C.dtype_of(cfg)
+    keys = jax.random.split(key, 8)
+    unit, n_units, rem = layer_plan(cfg)
+    params: dict[str, Any] = {
+        "embed": C.embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": C.rmsnorm_init(cfg.d_model, dtype),
+    }
+
+    def stack_init(kind, key, count):
+        ks = jax.random.split(key, count)
+        return jax.vmap(lambda k: _layer_init(cfg, kind, k, dtype))(ks)
+
+    if cfg.arch_type == "zamba" and cfg.scan_layers:
+        params["units"] = zamba_init_units(cfg, keys[1], dtype)
+    elif cfg.scan_layers and n_units > 1:
+        params["units"] = {
+            f"slot{i}": stack_init(kind, jax.random.fold_in(keys[1], i), n_units)
+            for i, kind in enumerate(unit)
+        }
+    else:
+        params["flat_layers"] = [
+            _layer_init(cfg, unit[i % len(unit)], jax.random.fold_in(keys[1], i), dtype)
+            for i in range(n_units * len(unit))
+        ]
+    params["rem_layers"] = [
+        _layer_init(cfg, k, jax.random.fold_in(keys[2], i), dtype) for i, k in enumerate(rem)
+    ]
+
+    if cfg.arch_type == "zamba":
+        params["shared_attn"] = [
+            _layer_init(cfg, "attn_global", jax.random.fold_in(keys[3], i), dtype) for i in range(2)
+        ]
+    if cfg.arch_type == "whisper":
+        params["enc_layers"] = [
+            _layer_init(cfg, "attn_global", jax.random.fold_in(keys[4], i), dtype)
+            for i in range(cfg.n_enc_layers)
+        ]
+        params["enc_norm"] = C.rmsnorm_init(cfg.d_model, dtype)
+        params["cross_layers"] = [
+            {
+                "ln": C.rmsnorm_init(cfg.d_model, dtype),
+                "attn": C.attn_init(jax.random.fold_in(keys[5], i), cfg, dtype),
+            }
+            for i in range(cfg.n_layers)
+        ]
+    return params
+
+
+# ------------------------------------------------------------ forward (train)
+def _unit_forward(cfg, unit, unit_params, x, positions, mrope_positions):
+    for i, kind in enumerate(unit):
+        x = _layer_train(cfg, kind, unit_params[f"slot{i}"], x, positions, mrope_positions)
+    return x
+
+
+def backbone_train(cfg: ModelConfig, params, x, positions, mrope_positions=None):
+    """Run the decoder stack on embeddings x (B,S,d)."""
+    unit, n_units, rem = layer_plan(cfg)
+
+    if cfg.arch_type == "zamba":
+        return _zamba_train(cfg, params, x, positions)
+
+    if "units" in params:
+        def body(xc, unit_params):
+            out = _unit_forward(cfg, unit, unit_params, xc, positions, mrope_positions)
+            return out, None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["units"])
+    else:
+        for i, lp in enumerate(params.get("flat_layers", [])):
+            x = _layer_train(cfg, unit[i % len(unit)], lp, x, positions, mrope_positions)
+    for kind, lp in zip(rem, params["rem_layers"]):
+        x = _layer_train(cfg, kind, lp, x, positions, mrope_positions)
+    return C.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def _zamba_train(cfg, params, x, positions):
+    """Zamba2: mamba backbone with 2 alternating shared attention blocks.
+
+    Double-unit scan: [6x mamba, sharedA, 6x mamba, sharedB] so the shared
+    params are closure constants (no per-step selects). Remainder applied
+    flat.
+    """
+    period = max(cfg.attn_every, 1)
+    sa, sb = params["shared_attn"]
+
+    def half(xc, unit_params, shared):
+        def body(xc2, lp):
+            return _layer_train(cfg, "mamba", lp, xc2, positions), None
+        xc, _ = jax.lax.scan(body, xc, unit_params)
+        return _layer_train(cfg, "attn_global", shared, xc, positions)
+
+    def double_unit(xc, up):
+        xc = half(xc, up["a"], sa)
+        xc = half(xc, up["b"], sb)
+        return xc, None
+
+    du = jax.checkpoint(double_unit) if cfg.remat else double_unit
+    if "units" in params:
+        x, _ = jax.lax.scan(du, x, params["units"])
+    for i, lp in enumerate(params["rem_layers"]):
+        x = _layer_train(cfg, "mamba", lp, x, positions)
+        if (i + 1) % period == 0:
+            x = _layer_train(cfg, "attn_global", sa, x, positions)
+    return C.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def zamba_init_units(cfg: ModelConfig, key, dtype) -> dict:
+    """Stacked params for the zamba double-unit scan."""
+    period = max(cfg.attn_every, 1)
+    n_double = cfg.n_layers // (2 * period)
+
+    def stack(key, count):
+        ks = jax.random.split(key, count)
+        return jax.vmap(lambda k: _layer_init(cfg, "mamba", k, dtype))(ks)
+
+    ka, kb = jax.random.split(key)
+    return {
+        "a": jax.vmap(lambda k: stack(k, period))(jax.random.split(ka, n_double)),
+        "b": jax.vmap(lambda k: stack(k, period))(jax.random.split(kb, n_double)),
+    }
+
+
+# ------------------------------------------------------------ whisper
+def sinusoid_pos(n: int, d: int) -> jax.Array:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(0, d, 2)[None]
+    ang = pos / (10_000 ** (dim / d))
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+def whisper_encode(cfg: ModelConfig, params, audio_embeds):
+    """audio_embeds: (B, n_audio_ctx, d) — post-conv frontend stub."""
+    x = audio_embeds + sinusoid_pos(audio_embeds.shape[1], cfg.d_model).astype(audio_embeds.dtype)
+    for lp in params["enc_layers"]:
+        h = C.attention_train(
+            lp["attn"], cfg, C.rmsnorm(lp["ln1"], x, cfg.norm_eps), None, causal=False
+        )
+        x = x + h
+        x = x + C.mlp(lp["mlp"], C.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+    return C.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_attend(cfg, p, x, enc_k, enc_v):
+    q = (C.rmsnorm(p["ln"], x, cfg.norm_eps) @ p["attn"]["wq"]).reshape(
+        x.shape[0], x.shape[1], cfg.n_heads, cfg.hd
+    )
+    out = C.chunked_attention(q, enc_k, enc_v, causal=False)
+    return x + out.reshape(x.shape[0], x.shape[1], -1) @ p["attn"]["wo"]
+
+
+def whisper_train(cfg: ModelConfig, params, audio_embeds, tokens):
+    enc = whisper_encode(cfg, params, audio_embeds)
+    x = C.embed_lookup(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+    layers = params["flat_layers"]
+    for lp, cp in zip(layers, params["cross_layers"]):
+        x = _layer_train(cfg, "attn_global", lp, x, positions)
+        enc_k = (enc @ cp["attn"]["wk"]).reshape(enc.shape[0], enc.shape[1], cfg.n_kv_heads, cfg.hd)
+        enc_v = (enc @ cp["attn"]["wv"]).reshape(enc.shape[0], enc.shape[1], cfg.n_kv_heads, cfg.hd)
+        x = _cross_attend(cfg, cp, x, enc_k, enc_v)
+    return C.rmsnorm(params["final_norm"], x, cfg.norm_eps)

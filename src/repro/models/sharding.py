@@ -1,0 +1,84 @@
+"""Logical-axis sharding rules (MaxText-style) for the transformer substrate.
+
+Activations are annotated with logical names; a rules table maps them to mesh
+axes. The GS pipeline's lesson (ship small projected state, not parameters)
+shows up here as: activations move over "model", weights stay put.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as PS
+
+_state = threading.local()
+
+
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),     # missing mesh axes are dropped automatically
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_seq": None,
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "moe_d": "model",             # token-side d-shard inside the MoE block:
+                                  # makes dispatch/combine gathers local and
+                                  # turns the e<->d reshard into an all-to-all
+    "fsdp": "data",               # weight sharding axis for large models
+    "cache_seq": None,
+    "state": None,
+}
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh, rules=None):
+    """Activate sharding annotations for model code built inside."""
+    prev = (current_rules(), current_mesh())
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def spec_for(*names: str | None) -> PS:
+    """PartitionSpec for logical axis names under the active rules/mesh."""
+    rules = current_rules()
+    mesh = current_mesh()
+    if rules is None or mesh is None:
+        return PS()
+    axes = []
+    for nm in names:
+        if nm is None:
+            axes.append(None)
+            continue
+        ax = rules.get(nm)
+        if ax is None:
+            axes.append(None)
+        elif isinstance(ax, str):
+            axes.append(ax if ax in mesh.shape else None)
+        else:
+            present = tuple(a for a in ax if a in mesh.shape)
+            axes.append(present if present else None)
+    return PS(*axes)
+
+
+def lshard(x: jax.Array, *names: str | None) -> jax.Array:
+    """Annotate activation x with logical axis names (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(mesh, spec_for(*names)))

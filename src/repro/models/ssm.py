@@ -1,0 +1,169 @@
+"""Mamba2 (SSD) block — chunked state-space duality algorithm, pure JAX.
+
+Train path: intra-chunk quadratic term + inter-chunk recurrent scan (the
+SSD decomposition from the Mamba2 paper), chunk size 64 to bound the
+(c, c, H) decay tensor; heads shard over "model". Decode path: single-step
+recurrent state update, O(1) per token — this is what makes long_500k
+feasible for the SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm, rmsnorm_init
+from repro.models.sharding import lshard
+
+CONV_WIDTH = 4
+CHUNK = 64
+
+
+def mamba2_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    h = cfg.ssm_heads
+    p = di // h
+    n = cfg.ssm_state
+    return di, h, p, n
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    di, h, p, n = mamba2_dims(cfg)
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_WIDTH, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B,S,C), w: (W,C), b: (C,). Causal depthwise conv."""
+    bsz, s, c = x.shape
+    xw = jnp.pad(x, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xw.transpose(0, 2, 1)[:, :, None, :],                       # (B,C,1,S+W-1)
+        w.T[:, None, None, :],                                      # (C,1,1,W)
+        (1, 1),
+        "VALID",
+        feature_group_count=c,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[:, :, 0, :].transpose(0, 2, 1)
+    return out + b
+
+
+def _split_proj(p, cfg, xproj):
+    di, h, hp, n = mamba2_dims(cfg)
+    z = xproj[..., :di]
+    xc = xproj[..., di : 2 * di + 2 * n]   # conv channels: x, B, C
+    dt = xproj[..., 2 * di + 2 * n :]      # (..., H)
+    return z, xc, dt
+
+
+def mamba2_train(p, cfg, x):
+    """x: (B,S,d) -> (B,S,d)."""
+    bsz, s, d = x.shape
+    di, h, hp, n = mamba2_dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xc, dt = _split_proj(p, cfg, proj)
+    xc = jax.nn.silu(_causal_depthwise_conv(xc, p["conv_w"], p["conv_b"]))
+    xh = xc[..., :di].reshape(bsz, s, h, hp)
+    bmat = xc[..., di : di + n]            # (B,S,N)
+    cmat = xc[..., di + n :]               # (B,S,N)
+    xh = lshard(xh, "batch", "seq", "heads", None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                        # (H,)
+    da = dt * a                                                     # (B,S,H) negative
+
+    c = CHUNK
+    pad = (-s) % c
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // c
+    xh_ = xh.reshape(bsz, nc, c, h, hp)
+    b_ = bmat.reshape(bsz, nc, c, n).astype(jnp.float32)
+    c_ = cmat.reshape(bsz, nc, c, n).astype(jnp.float32)
+    dt_ = dt.reshape(bsz, nc, c, h)
+    da_ = da.reshape(bsz, nc, c, h)
+
+    cums = jnp.cumsum(da_, axis=2)                                  # (B,nc,c,H) inclusive
+    # ---- intra-chunk (quadratic within chunk)
+    cb = jnp.einsum("bnis,bnjs->bnij", c_, b_)                      # (B,nc,c,c)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    # mask in LOG space before exp: the j>i upper triangle would otherwise
+    # overflow exp() and poison the backward pass with inf*0 NaNs
+    dlog = cums[:, :, :, None, :] - cums[:, :, None, :, :]          # (B,nc,c,c,H)
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], dlog, -1e30))
+    w = cb[..., None] * decay * dt_[:, :, None]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", w, xh_.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence
+    chunk_total = cums[:, :, -1, :]                                 # (B,nc,H)
+    state_in = jnp.einsum(
+        "bnjh,bnjs,bnjhp->bnhsp",
+        jnp.exp(chunk_total[:, :, None] - cums) * dt_,
+        b_,
+        xh_.astype(jnp.float32),
+    )  # (B,nc,H,N,P)
+
+    def step(s_prev, inp):
+        s_chunk, tot = inp                                          # (B,H,N,P), (B,H)
+        s_new = s_prev * jnp.exp(tot)[:, :, None, None] + s_chunk
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, hp), jnp.float32)
+    _, s_prevs = jax.lax.scan(step, s0, (state_in.transpose(1, 0, 2, 3, 4), chunk_total.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                      # (B,nc,H,N,P) state before chunk
+    y_inter = jnp.einsum("bnis,bnih,bnhsp->bnihp", c_, jnp.exp(cums), s_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, nc * c, h, hp)[:, :s]
+    y = y + p["d_skip"][None, None, :, None] * xh[:, :s].astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return lshard(y @ p["out_proj"], "batch", "seq", "embed")
+
+
+def mamba2_cache_init(cfg, batch, dtype):
+    di, h, hp, n = mamba2_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, h, n, hp), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, di + 2 * n), dtype),
+    }
+
+
+def mamba2_decode(p, cfg, x, cache):
+    """x: (B,1,d). Returns (y (B,1,d), new_cache)."""
+    bsz = x.shape[0]
+    di, h, hp, n = mamba2_dims(cfg)
+    proj = x[:, 0] @ p["in_proj"]                                   # (B, ...)
+    z, xc, dt = _split_proj(p, cfg, proj)
+    conv_in = jnp.concatenate([cache["conv"], xc[:, None]], axis=1)  # (B,W,Cc)
+    xc = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"]) + p["conv_b"])
+    new_conv = conv_in[:, 1:]
+
+    xh = xc[:, :di].reshape(bsz, h, hp).astype(jnp.float32)
+    bvec = xc[:, di : di + n].astype(jnp.float32)
+    cvec = xc[:, di + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                                         # (B,H)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bs,bhp->bhsp", dt, bvec, xh
+    )
+    y = jnp.einsum("bs,bhsp->bhp", cvec, state) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z[:, None])
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["out_proj"], {"state": state, "conv": new_conv}

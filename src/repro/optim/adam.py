@@ -1,0 +1,58 @@
+"""Adam with per-leaf learning rates (3D-GS trains each field at its own LR).
+
+State lives with the parameter shard: when params are sharded over the
+"model" mesh axis, moments are too — ZeRO-style optimizer sharding for free,
+which is exactly how Grendel-GS keeps its memory advantage.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    m: object   # pytree like params
+    v: object   # pytree like params
+    count: jax.Array  # () int32
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(zeros, jax.tree_util.tree_map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+
+
+def adam_update(
+    grads,
+    state: AdamState,
+    params,
+    lr_tree,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-15,
+):
+    """One Adam step. ``lr_tree`` is a pytree of scalars matching params
+    (or a single scalar broadcast to all leaves)."""
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    if not isinstance(lr_tree, (dict, tuple, list)) and not hasattr(lr_tree, "_fields"):
+        lr_tree = jax.tree_util.tree_map(lambda _: lr_tree, params)
+
+    def upd(g, m, v, p, lr):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        return m, v, p - lr * mhat / (jnp.sqrt(vhat) + eps)
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params, lr_tree)
+    leaves, treedef = jax.tree_util.tree_flatten(out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    m = jax.tree_util.tree_unflatten(treedef, [l[0] for l in leaves])
+    v = jax.tree_util.tree_unflatten(treedef, [l[1] for l in leaves])
+    new_params = jax.tree_util.tree_unflatten(treedef, [l[2] for l in leaves])
+    return new_params, AdamState(m, v, count)

@@ -1,0 +1,22 @@
+"""LR schedules: 3D-GS exponential position-LR decay + Grendel batch scaling."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def expon_lr(step, *, lr_init: float, lr_final: float, max_steps: int, delay_mult: float = 1.0):
+    """3D-GS exponential decay schedule for the position learning rate."""
+    t = jnp.clip(step / max_steps, 0.0, 1.0)
+    log_lerp = jnp.exp(jnp.log(lr_init) * (1 - t) + jnp.log(lr_final) * t)
+    return delay_mult * log_lerp
+
+
+def grendel_lr_scale(batch_size: int) -> float:
+    """Grendel-GS "independent gradients" sqrt LR scaling for batched views.
+
+    Zhao et al. (ECCV'24) show per-view gradients on disjoint pixels are
+    near-independent, so LR scales with sqrt(batch) rather than linearly.
+    """
+    return math.sqrt(float(batch_size))

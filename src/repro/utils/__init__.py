@@ -1,0 +1,3 @@
+from repro.utils.tree import tree_bytes, tree_count, pack_pytree, unpack_pytree
+
+__all__ = ["tree_bytes", "tree_count", "pack_pytree", "unpack_pytree"]

@@ -1,0 +1,49 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (uses each leaf's dtype)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def pack_pytree(tree):
+    """Flatten a pytree of arrays into one contiguous f32 vector.
+
+    Used for the fused all-reduce: one collective over the packed gradient
+    vector instead of one per tensor (the paper's "fused all-reduce scheme").
+    Returns (vector, unpack_fn).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unpack(v):
+        out = []
+        off = 0
+        for s, shp, dt in zip(sizes, shapes, dtypes):
+            out.append(v[off : off + s].reshape(shp).astype(dt))
+            off += s
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return vec, unpack
+
+
+def unpack_pytree(vec, like):
+    """Unpack a packed f32 vector into the structure/shapes/dtypes of `like`."""
+    _, unpack = pack_pytree(like)
+    return unpack(vec)

@@ -1,0 +1,13 @@
+from repro.volume.datasets import kingsnake_like, miranda_like, VolumeSpec
+from repro.volume.isosurface import extract_isosurface_points
+from repro.volume.cameras import orbit_cameras
+from repro.volume.raymarch import render_isosurface
+
+__all__ = [
+    "kingsnake_like",
+    "miranda_like",
+    "VolumeSpec",
+    "extract_isosurface_points",
+    "orbit_cameras",
+    "render_isosurface",
+]

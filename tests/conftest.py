@@ -1,0 +1,35 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only the dry-run forces 512 host devices
+(inside its own process)."""
+import jax
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import gaussians as G
+from repro.core import projection as P
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_scene(n=200, seed=0, spread=0.5, scale=0.05):
+    r = np.random.default_rng(seed)
+    pts = r.normal(0, spread, (n, 3)).astype(np.float32)
+    cols = r.uniform(0.1, 0.9, (n, 3)).astype(np.float32)
+    g = G.init_from_points(jnp.asarray(pts), jnp.asarray(cols), init_scale=scale)
+    # randomize shape a bit so quats/scales have gradients
+    g = g._replace(
+        log_scales=g.log_scales + jnp.asarray(r.normal(0, 0.3, (n, 3)), jnp.float32),
+        quats=jnp.asarray(r.normal(0, 1, (n, 4)), jnp.float32),
+        opacity_logit=jnp.asarray(r.normal(0.5, 0.5, (n,)), jnp.float32),
+    )
+    return g
+
+
+def make_cam(h, w, dist=3.0, fov_px=None):
+    f = fov_px or (w * 1.2)
+    return P.look_at_camera([0, 0, -dist], [0, 0, 0], [0, 1, 0], f, f, w / 2, h / 2)

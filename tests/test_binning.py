@@ -1,0 +1,43 @@
+"""Tile-binning equivalence: hierarchical 2-level binning vs flat (and the
+params3d gather mode's packed-splat equivalence)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projection as P
+from repro.core import render as R
+
+from conftest import make_cam, make_scene
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), n=st.sampled_from([100, 400, 900]))
+def test_hier_binning_equals_flat(seed, n):
+    g = make_scene(n, seed=seed)
+    cam = make_cam(128, 128)
+    packed, _ = P.sort_by_depth(P.project(g, cam))
+    i1, v1 = R.build_tile_lists(packed, img_h=128, img_w=128, tile_h=16, tile_w=16, k_per_tile=128)
+    i2, v2 = R.build_tile_lists_hier(
+        packed, img_h=128, img_w=128, tile_h=16, tile_w=16, k_per_tile=128, block=4, k_block_mult=4
+    )
+    assert bool(jnp.all(v1 == v2))
+    assert bool(jnp.all(jnp.where(v1, i1, -1) == jnp.where(v2, i2, -1)))
+
+
+def test_hier_binning_rectangular_and_offset():
+    g = make_scene(300, seed=3)
+    cam = make_cam(64, 128)
+    packed, _ = P.sort_by_depth(P.project(g, cam))
+    img1, t1 = R.render_packed(packed, img_h=64, img_w=128, k_per_tile=128, binning="flat", row_offset=0)
+    img2, t2 = R.render_packed(packed, img_h=64, img_w=128, k_per_tile=128, binning="hier", row_offset=0)
+    np.testing.assert_allclose(np.asarray(img1), np.asarray(img2), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), atol=1e-7)
+
+
+def test_auto_binning_dispatch():
+    g = make_scene(50, seed=4)
+    cam = make_cam(32, 32)
+    packed, _ = P.sort_by_depth(P.project(g, cam))
+    # 4 tiles -> flat; must still render correctly
+    img, t = R.render_packed(packed, img_h=32, img_w=32, k_per_tile=64, binning="auto")
+    assert img.shape == (32, 32, 3) and bool(jnp.isfinite(img).all())

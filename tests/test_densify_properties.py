@@ -1,0 +1,72 @@
+"""Hypothesis property tests on densification / pruning / rebalancing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gaussians as G
+from repro.core.config import GSConfig
+from repro.core.densify import DEAD_LOGIT, densify_and_rebalance
+from repro.core.train import init_state
+
+
+def _state(n, seed, *, hot_frac=0.3, low_opacity_frac=0.2):
+    r = np.random.default_rng(seed)
+    pts = r.normal(0, 0.4, (n, 3)).astype(np.float32)
+    g = G.init_from_points(jnp.asarray(pts), init_scale=0.05)
+    opac = r.uniform(0.05, 3.0, n).astype(np.float32)
+    low = r.random(n) < low_opacity_frac
+    opac[low] = -8.0  # sigmoid ~ 3e-4 < prune threshold
+    g = g._replace(opacity_logit=jnp.asarray(opac))
+    st_ = init_state(g)
+    grad = np.zeros(n, np.float32)
+    hot = r.random(n) < hot_frac
+    grad[hot] = 1.0  # >> densify_grad_thresh after /vis
+    st_ = st_._replace(
+        grad2d_accum=jnp.asarray(grad),
+        vis_count=jnp.ones((n,), jnp.float32),
+        max_radii=jnp.full((n,), 3.0, jnp.float32),
+    )
+    return st_, hot, low
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(100, 600), seed=st.integers(0, 1000), shards=st.sampled_from([1, 2, 4]))
+def test_densify_invariants(n, seed, shards):
+    cfg = GSConfig(pad_quantum=64)
+    state, hot, low = _state(n, seed)
+    new_state, rep = densify_and_rebalance(state, cfg, n_shards=shards, scene_extent=1.0)
+
+    # padded count divides the shard quantum; report is self-consistent
+    assert rep.n_padded % (shards * cfg.pad_quantum) == 0
+    assert rep.n_padded == new_state.params.n
+    assert rep.n_after <= rep.n_padded
+    assert rep.n_after == rep.n_before - rep.n_pruned - rep.n_split + rep.n_cloned + 2 * rep.n_split
+
+    # every padding gaussian is dead (never rasterized)
+    logit = np.asarray(new_state.params.opacity_logit)
+    assert np.all(logit[rep.n_after:] <= DEAD_LOGIT + 1e-6)
+
+    # adam moments for brand-new gaussians are zeroed
+    m = np.asarray(new_state.adam.m.means)
+    n_kept = rep.n_before - rep.n_pruned - rep.n_split
+    assert np.all(m[n_kept:] == 0.0)
+
+    # no NaNs anywhere (padding means are large-but-finite sentinels)
+    for leaf in jax.tree_util.tree_leaves(new_state.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_prune_only_removes_low_opacity(seed):
+    cfg = GSConfig(pad_quantum=64, densify_grad_thresh=1e9)  # no clone/split
+    state, hot, low = _state(300, seed)
+    new_state, rep = densify_and_rebalance(state, cfg, n_shards=1)
+    assert rep.n_cloned == 0 and rep.n_split == 0
+    assert rep.n_after == rep.n_before - rep.n_pruned
+    # survivors keep their (sorted) opacity multiset
+    old = np.sort(np.asarray(state.params.opacity_logit))
+    surv = old[old > np.log(cfg.prune_opacity_thresh / (1 - cfg.prune_opacity_thresh))]
+    new = np.sort(np.asarray(new_state.params.opacity_logit)[: rep.n_after])
+    np.testing.assert_allclose(new, surv, atol=1e-6)

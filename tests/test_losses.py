@@ -1,0 +1,53 @@
+"""Loss / metric stack tests incl. the distributed-SSIM exactness property."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import gs_loss, l1_loss, lpips_proxy, psnr, ssim
+from repro.core.sharding import ssim_l1_sums
+
+
+def _img(seed, h=64, w=64):
+    return jnp.asarray(np.random.default_rng(seed).uniform(0, 1, (h, w, 3)).astype(np.float32))
+
+
+def test_ssim_identity():
+    a = _img(0)
+    assert float(ssim(a, a)) > 0.9999
+
+
+def test_ssim_symmetric_and_bounded():
+    a, b = _img(1), _img(2)
+    s1, s2 = float(ssim(a, b)), float(ssim(b, a))
+    assert abs(s1 - s2) < 1e-5
+    assert -1.0 <= s1 <= 1.0
+
+
+def test_psnr_known_value():
+    a = jnp.zeros((8, 8, 3))
+    b = jnp.full((8, 8, 3), 0.1)
+    assert abs(float(psnr(a, b)) - 20.0) < 1e-3
+
+
+def test_gs_loss_zero_at_identity():
+    a = _img(3)
+    assert float(gs_loss(a, a)) < 1e-6
+
+
+def test_lpips_proxy_orders_similarity():
+    a = _img(4)
+    near = jnp.clip(a + 0.01, 0, 1)
+    far = _img(5)
+    assert float(lpips_proxy(a, near)) < float(lpips_proxy(a, far))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_local_ssim_sums_match_global(seed):
+    """ssim_l1_sums without axis (whole image) reproduces losses.ssim exactly."""
+    a, b = _img(seed), _img(seed + 999)
+    ss, l1s, cnt = ssim_l1_sums(a, b, None)
+    global_ssim = float(ssim(a, b))
+    assert abs(float(ss) / float(cnt) - global_ssim) < 1e-5
+    assert abs(float(l1s) / float(cnt) - float(l1_loss(a, b))) < 1e-6

@@ -1,0 +1,71 @@
+"""Partitioning rules: divisibility fallbacks, pure-DP mode, batch/cache specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.configs import get_arch
+from repro.configs.common import SHAPES, decode_specs, lm_batch_specs, params_specs
+from repro.models import api
+from repro.models.partitioning import batch_pspecs, cache_pspecs, param_pspecs
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single device "mesh" with named axes of size 1 won't exercise
+    # divisibility; build a fake 16x16 mesh via AbstractMesh
+    from jax.sharding import AbstractMesh
+
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _leaves_with_specs(cfg, mesh):
+    params = params_specs(cfg)
+    specs = param_pspecs(cfg, params, mesh)
+    return list(zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, PS))))
+
+
+def test_divisibility_fallback(mesh):
+    cfg = get_arch("qwen3_0_6b").config()
+    for leaf, spec in _leaves_with_specs(cfg, mesh):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            if ax is None:
+                continue
+            size = mesh.shape[ax] if isinstance(ax, str) else np.prod([mesh.shape[a] for a in ax])
+            assert dim % size == 0, (leaf.shape, spec)
+
+
+def test_pure_dp_has_no_model_sharding(mesh):
+    cfg = get_arch("xlstm_350m").config()
+    assert cfg.pure_dp
+    for leaf, spec in _leaves_with_specs(cfg, mesh):
+        assert "model" not in jax.tree_util.tree_leaves(tuple(spec)), spec
+
+
+def test_moe_experts_ep_only(mesh):
+    cfg = get_arch("kimi_k2_1t_a32b").config()
+    params = params_specs(cfg)
+    specs = param_pspecs(cfg, params, mesh)
+    wi_spec = specs["units"]["slot0"]["moe"]["wi"]
+    # stacked (L, E, d, ff): expert dim on model, nothing else sharded
+    assert tuple(wi_spec)[-3:] == ("model", None, None)
+
+
+def test_batch_specs_shard_batch(mesh):
+    cfg = get_arch("granite_3_8b").config()
+    batch = lm_batch_specs(cfg, SHAPES["train_4k"])
+    specs = batch_pspecs(cfg, batch, mesh)
+    first = tuple(specs["tokens"])[0]
+    assert first in ("data", ("data",))
+
+
+def test_cache_specs_long_context(mesh):
+    cfg = get_arch("gemma3_27b").config()
+    specs = decode_specs(cfg, SHAPES["long_500k"])
+    cspecs = cache_pspecs(cfg, specs["cache"], mesh)
+    # global layers: B=1 (unshardable) -> seq over data, kv_heads(16) over model
+    gspec = cspecs["units"]["slot5"]["k"]  # pattern LLLLLG -> slot5 is global
+    leaf = jax.tree_util.tree_leaves(specs["cache"]["units"]["slot5"])[0]
+    tail = tuple(gspec)[-4:]
+    assert tail[1] == "data" and tail[2] == "model", (leaf.shape, gspec)

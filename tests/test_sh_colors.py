@@ -1,0 +1,67 @@
+"""Spherical-harmonic color path: degrees 0-3 eval + view-dependent training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gaussians as G
+from repro.core.config import GSConfig
+from repro.core.train import init_state, make_train_step, state_shardings
+from repro.core import projection as P
+from repro.core import render as R
+
+
+def test_eval_sh_degree_nesting():
+    """Zeroing the higher bands must reduce deg-k eval to deg-0 exactly."""
+    n = 32
+    r = np.random.default_rng(0)
+    dirs = r.normal(size=(n, 3)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    for k in (4, 9, 16):
+        sh = np.zeros((n, k, 3), np.float32)
+        sh[:, 0] = r.normal(size=(n, 3))
+        c_k = np.asarray(G.eval_sh(jnp.asarray(sh), jnp.asarray(dirs)))
+        c_0 = np.asarray(G.eval_sh(jnp.asarray(sh[:, :1]), jnp.asarray(dirs)))
+        np.testing.assert_allclose(c_k, c_0, atol=1e-6)
+
+
+def test_eval_sh_view_dependence():
+    sh = jnp.zeros((1, 4, 3)).at[0, 2, 0].set(1.0)  # z-linear band, red channel
+    up = jnp.asarray([[0.0, 0.0, 1.0]])
+    dn = jnp.asarray([[0.0, 0.0, -1.0]])
+    c_up = float(G.eval_sh(sh, up)[0, 0])
+    c_dn = float(G.eval_sh(sh, dn)[0, 0])
+    assert c_up > c_dn  # direction flips the linear band
+
+
+def test_training_with_sh2_improves_view_dependent_target():
+    """A scene whose GT color varies with view angle trains better with
+    sh_degree=2 than the render pipeline would with frozen DC colors."""
+    n = 256
+    r = np.random.default_rng(1)
+    pts = r.normal(0, 0.3, (n, 3)).astype(np.float32)
+    g = G.init_from_points(jnp.asarray(pts), sh_degree=2, init_scale=0.06)
+    assert g.sh.shape == (n, 9, 3)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = GSConfig(img_h=32, img_w=32, k_per_tile=128, batch_size=2, sh_degree=2)
+    # two opposing cameras with different target tints = view-dependent GT
+    cams = P.Camera(
+        *[jnp.stack(x) for x in zip(
+            *[P.look_at_camera(e, [0, 0, 0], [0, 1, 0], 40.0, 40.0, 16.0, 16.0)
+              for e in ([0, 0, -3.0], [0, 0, 3.0])]
+        )]
+    )
+    gt = jnp.stack([
+        jnp.full((32, 32, 3), 0.8).at[..., 2].set(0.1),   # reddish from front
+        jnp.full((32, 32, 3), 0.2).at[..., 2].set(0.9),   # bluish from behind
+    ])
+    state = jax.device_put(init_state(g), state_shardings(mesh))
+    step = make_train_step(mesh, cfg)
+    losses = []
+    for _ in range(40):
+        state, m = step(state, cams, gt)
+        losses.append(float(m["loss"]))
+    # view-dependent fit makes steady progress (loss floor is high: splats
+    # cannot cover the whole flat-color screen) and engages higher SH bands
+    assert losses[-1] < 0.85 * losses[0]
+    assert float(jnp.abs(state.params.sh[:, 1:]).max()) > 1e-3
