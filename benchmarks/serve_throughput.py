@@ -1,0 +1,172 @@
+"""Render-serving throughput: batched vs serial, LOD speed, cache effect.
+
+Methodology: one synthetic isosurface scene, one fixed request set (a
+multi-client orbit wavefront). Three measured scenarios after jit warmup:
+
+  serial   — max_batch=1, cache off: one render dispatch per request
+  batched  — max_batch=B, cache off: micro-batched vmap dispatches
+  cached   — max_batch=B, cache on, shared-orbit clients: revisited poses
+
+plus a per-LOD-level timing of one fixed batch (coarser level => fewer
+composited Gaussians => faster frame). Emits a single JSON report.
+
+  PYTHONPATH=src python benchmarks/serve_throughput.py --smoke --out report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# Batched serving shards views over the mesh's data axis; on a CPU host we
+# split the platform into a few "devices" (the dryrun methodology) so the
+# micro-batch genuinely renders views in parallel. Must run before jax init.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" not in _flags:
+    n_dev = min(4, os.cpu_count() or 1)
+    os.environ["XLA_FLAGS"] = f"{_flags} --xla_force_host_platform_device_count={n_dev}".strip()
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core.config import GSConfig
+from repro.launch.serve_gs import init_params_from_volume
+from repro.serve_gs import RenderServer, make_clients, run_load
+from repro.serve_gs.batcher import stack_cameras
+
+
+def build_server(params, cfg, *, mesh, max_batch, cache_capacity, n_levels, keep_ratio):
+    return RenderServer(
+        params,
+        cfg,
+        mesh=mesh,
+        n_levels=n_levels,
+        keep_ratio=keep_ratio,
+        max_batch=max_batch,
+        cache_capacity=cache_capacity,
+        store_frames=False,
+    )
+
+
+def drive(server, *, n_clients, requests, n_views, res, radius_spread):
+    clients = make_clients(
+        n_clients, n_views=n_views, img_h=res, img_w=res, radius_spread=radius_spread
+    )
+    return run_load(server, clients, requests_per_client=requests)
+
+
+def time_level(server, level, *, batch, repeats=3):
+    """Median seconds for one batched render call at a pyramid level."""
+    cam = make_clients(1, n_views=8, img_h=server.cfg.img_h, img_w=server.cfg.img_w)[0].next_camera()
+    cams = stack_cameras([cam] * batch)
+    lp = server._level_params[level]
+    render = server._level_render[level]
+    jax.block_until_ready(render(lp, cams))  # compile outside the timing
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(render(lp, cams))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced CPU config")
+    ap.add_argument("--res", type=int, default=48)
+    ap.add_argument("--volume-res", type=int, default=48)
+    ap.add_argument("--max-points", type=int, default=3000)
+    ap.add_argument("--dataset", default="kingsnake")
+    ap.add_argument("--levels", type=int, default=3)
+    ap.add_argument("--keep-ratio", type=float, default=0.5)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.res, args.volume_res, args.max_points = 32, 32, 800
+        args.requests = min(args.requests, 6)
+
+    params = init_params_from_volume(
+        args.dataset, volume_res=args.volume_res, max_points=args.max_points
+    )
+    cfg = GSConfig(img_h=args.res, img_w=args.res, k_per_tile=128 if args.smoke else 256)
+    common = dict(n_levels=args.levels, keep_ratio=args.keep_ratio)
+    load = dict(
+        n_clients=args.clients, requests=args.requests, n_views=12,
+        res=args.res, radius_spread=0.0,  # same level for all: isolates batching
+    )
+
+    n_dev = len(jax.devices())
+    mesh_serial = jax.make_mesh((1, 1), ("data", "model"))
+    mesh_batched = jax.make_mesh((n_dev, 1), ("data", "model"))
+
+    # ---- serial baseline: one request per dispatch, single device, no cache
+    serial = build_server(params, cfg, mesh=mesh_serial, max_batch=1, cache_capacity=0, **common)
+    serial.warmup(buckets=(1,))
+    rep_serial = drive(serial, **load)
+
+    # ---- micro-batched: same request set, no cache. Each round's wavefront
+    # (one request per client, all same level) coalesces into one dispatch,
+    # sharded one-view-per-device over the data axis.
+    batched = build_server(
+        params, cfg, mesh=mesh_batched, max_batch=args.max_batch, cache_capacity=0, **common
+    )
+    wave = batched.batcher.bucket_for(min(args.clients, args.max_batch))
+    batched.warmup(buckets=(wave,))
+    rep_batched = drive(batched, **load)
+
+    # ---- cached: shared-orbit clients revisit poses across LOD rings
+    cached = build_server(
+        params, cfg, mesh=mesh_batched, max_batch=args.max_batch, cache_capacity=512, **common
+    )
+    cached.warmup(buckets=tuple(sorted({cached.batcher.bucket_for(n) for n in (1, 2, args.clients)})))
+    rep_cached = drive(cached, **dict(load, radius_spread=1.0))
+
+    # ---- per-LOD render speed for one fixed batch
+    lod_ms = [
+        round(time_level(batched, lvl, batch=wave) * 1e3, 3)
+        for lvl in range(batched.pyramid.n_levels)
+    ]
+
+    report = {
+        "scene": {"dataset": args.dataset, "gaussians": params.n, "res": args.res},
+        "devices": n_dev,
+        "request_set": {"clients": args.clients, "requests_per_client": args.requests},
+        "serial": {"frames_per_s": rep_serial["frames_per_s"], "latency_ms": rep_serial["latency_ms"]},
+        "batched": {
+            "max_batch": args.max_batch,
+            "frames_per_s": rep_batched["frames_per_s"],
+            "latency_ms": rep_batched["latency_ms"],
+            "mean_batch": rep_batched["render"]["mean_batch"],
+        },
+        "batched_speedup": round(
+            rep_batched["frames_per_s"] / max(rep_serial["frames_per_s"], 1e-9), 3
+        ),
+        "cached": {
+            "frames_per_s": rep_cached["frames_per_s"],
+            "cache": rep_cached["cache"],
+            "requests_per_level": rep_cached["lod"]["requests_per_level"],
+        },
+        "lod": {
+            "live_counts": list(batched.pyramid.live_counts),
+            "batch_render_ms": lod_ms,
+            "coarsest_vs_full_speedup": round(lod_ms[0] / max(lod_ms[-1], 1e-9), 3),
+        },
+    }
+    out = json.dumps(report, indent=1)
+    print(out)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,14 +15,8 @@ from repro.checkpoint import latest_step, restore_checkpoint
 from repro.core import gaussians as G
 from repro.core.config import GSConfig
 from repro.core.train import init_state, make_eval_render, state_shardings
+from repro.utils.image import write_ppm
 from repro.volume.cameras import camera_slice, orbit_cameras
-
-
-def write_ppm(path, img):
-    arr = np.clip(np.asarray(img) * 255, 0, 255).astype(np.uint8)
-    with open(path, "wb") as f:
-        f.write(f"P6\n{arr.shape[1]} {arr.shape[0]}\n255\n".encode())
-        f.write(arr.tobytes())
 
 
 def main():

@@ -19,8 +19,47 @@ Communication per step (all JAX-native collectives inside shard_map):
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
 import jax.numpy as jnp
+
+
+def _resolve_shard_map():
+    """jax.shard_map (jax >= 0.6) with fallback to the experimental module."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm
+
+
+_SHARD_MAP = _resolve_shard_map()
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_SHARD_MAP).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None, **kwargs):
+    """Version-compat ``shard_map``.
+
+    Newer jax exposes ``jax.shard_map`` with a ``check_vma`` kwarg; jax 0.4.x
+    only has ``jax.experimental.shard_map.shard_map`` whose equivalent kwarg
+    is ``check_rep``. Unknown kwargs are dropped rather than crashing.
+    """
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+    kwargs = {k: v for k, v in kwargs.items() if k in _SHARD_MAP_PARAMS}
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static mesh-axis size inside shard_map (jax.lax.axis_size is new in
+    jax 0.6; psum of a literal 1 constant-folds to the size on 0.4.x)."""
+    ax = getattr(jax.lax, "axis_size", None)
+    if ax is not None:
+        return ax(axis_name)
+    return jax.lax.psum(1, axis_name)
 
 
 def halo_exchange_rows(x: jax.Array, halo: int, axis_name: str) -> jax.Array:
@@ -29,7 +68,7 @@ def halo_exchange_rows(x: jax.Array, halo: int, axis_name: str) -> jax.Array:
     Workers at the image boundary receive zeros (ppermute semantics), which
     matches zero-padded SAME convolution on the full image.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         pad = jnp.zeros((halo,) + x.shape[1:], x.dtype)
         return jnp.concatenate([pad, x, pad], axis=0)

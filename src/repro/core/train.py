@@ -16,14 +16,13 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
 from repro.core import gaussians as G
 from repro.core import projection as P
 from repro.core import render as R
 from repro.core.config import GSConfig
-from repro.core.sharding import distributed_gs_loss
+from repro.core.sharding import distributed_gs_loss, shard_map
 from repro.optim.adam import AdamState, adam_init, adam_update
 from repro.optim.schedules import expon_lr, grendel_lr_scale
 from repro.utils.tree import pack_pytree
@@ -262,6 +261,73 @@ def make_eval_render(mesh: Mesh, cfg: GSConfig, *, model_axis: str = "model"):
         mesh=mesh,
         in_specs=(G.GaussianModel(*([PS(model_axis)] * 5)), P.Camera(*([PS()] * 5))),
         out_specs=(PS(), PS()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_batched_eval_render(
+    mesh: Mesh,
+    cfg: GSConfig,
+    *,
+    data_axes: tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    batch_mode: str = "auto",
+):
+    """Distributed eval render of a BATCH of views (the serving hot path).
+
+    Returned fn: (params sharded over ``model_axis``, cams: Camera with a
+    leading batch dim B sharded over ``data_axes``) -> (B, H, W, 3) images
+    sharded over ``data_axes``. B must divide the data-axes device product.
+
+    ``batch_mode`` picks how the local views fuse into one dispatch:
+    "vmap" interleaves all views (maximum parallelism — right on TPU/GPU),
+    "map" runs them sequentially inside the one jitted call (one view's
+    working set at a time — right on cache-bound CPU hosts, where vmap's
+    interleaving goes super-linear in B). "auto" selects by backend.
+
+    Each trace is specialized to the local batch shape — callers (the
+    ``repro.serve_gs`` micro-batcher) pad request groups to a fixed set of
+    bucket sizes so the number of recompiles stays bounded.
+    """
+    bg = jnp.asarray(cfg.bg, jnp.float32)
+    if batch_mode == "auto":
+        batch_mode = "map" if jax.default_backend() == "cpu" else "vmap"
+    assert batch_mode in ("vmap", "map"), batch_mode
+
+    def local(params: G.GaussianModel, cams: P.Camera):
+        def one(cam):
+            packed = P.project(params, cam)
+            gathered = jax.lax.all_gather(packed, model_axis, axis=0, tiled=True)
+            pk_sorted, _ = P.sort_by_depth(gathered)
+            img, _ = R.render_packed(
+                pk_sorted,
+                img_h=cfg.img_h,
+                img_w=cfg.img_w,
+                tile_h=cfg.tile_h,
+                tile_w=cfg.tile_w,
+                k_per_tile=cfg.k_per_tile,
+                bg=bg,
+                backend=cfg.backend,
+                binning=cfg.binning,
+            )
+            return img
+
+        b_local = cams.fx.shape[0]
+        if b_local == 1:  # single local view: no batching wrapper at all
+            return one(P.Camera(*[x[0] for x in cams]))[None]
+        if batch_mode == "map":
+            return jax.lax.map(one, cams)
+        return jax.vmap(one)(cams)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            G.GaussianModel(*([PS(model_axis)] * 5)),
+            P.Camera(*([PS(data_axes)] * 5)),
+        ),
+        out_specs=PS(data_axes),
         check_vma=False,
     )
     return jax.jit(fn)

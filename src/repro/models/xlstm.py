@@ -217,7 +217,9 @@ def slstm_train(p, cfg, x):
         bspec = baxes if bsz % max(
             1, int(np.prod([mesh.shape[a] for a in baxes]))
         ) == 0 else None
-        ys = jax.shard_map(
+        from repro.core.sharding import shard_map
+
+        ys = shard_map(
             _slstm_scan,
             mesh=mesh,
             in_specs=(PS(bspec), PS(), PS()),

@@ -1,0 +1,37 @@
+"""Batched, LOD-aware render serving for trained Gaussian models.
+
+The inference-side counterpart of the distributed trainer in
+``repro.core.train``: queue -> LOD select -> cache -> one vmap-ed jitted
+render per micro-batch. See ``repro.launch.serve_gs`` for the CLI driver and
+``benchmarks/serve_throughput.py`` for the throughput methodology.
+"""
+from repro.serve_gs.batcher import MicroBatch, MicroBatcher, RenderRequest, stack_cameras
+from repro.serve_gs.cache import FrameCache, frame_key, quantize_camera
+from repro.serve_gs.client import OrbitClient, make_clients, run_load
+from repro.serve_gs.lod import (
+    LODPyramid,
+    build_lod_pyramid,
+    importance_scores,
+    screen_coverage,
+    select_level,
+)
+from repro.serve_gs.server import RenderServer
+
+__all__ = [
+    "FrameCache",
+    "LODPyramid",
+    "MicroBatch",
+    "MicroBatcher",
+    "OrbitClient",
+    "RenderRequest",
+    "RenderServer",
+    "build_lod_pyramid",
+    "frame_key",
+    "importance_scores",
+    "make_clients",
+    "quantize_camera",
+    "run_load",
+    "screen_coverage",
+    "select_level",
+    "stack_cameras",
+]

@@ -1,0 +1,109 @@
+"""Request queue + micro-batcher: coalesce concurrent camera requests.
+
+Concurrent clients each want one frame; rendering them one at a time leaves
+the accelerator idle between tiny dispatches. The batcher groups pending
+requests by LOD level (different levels have different Gaussian counts, hence
+different jit shapes) and emits micro-batches padded to a fixed set of bucket
+sizes, so every (level, bucket) pair compiles exactly once.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.projection import Camera
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class RenderRequest:
+    """One client's frame request (host-side; leaves are numpy)."""
+
+    cam: Camera
+    level: int = 0
+    t_submit: float = 0.0
+    client_id: int = -1
+    cache_key: tuple | None = None
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroBatch:
+    """A coalesced render call: ``cams`` is padded to ``bucket`` cameras."""
+
+    level: int
+    requests: tuple[RenderRequest, ...]  # the len(requests) real entries
+    cams: Camera                         # stacked (bucket, ...) camera pytree
+    bucket: int
+
+
+def stack_cameras(cams: Iterable[Camera]) -> Camera:
+    """Stack single cameras into one batched Camera pytree (numpy leaves)."""
+    cams = list(cams)
+    return Camera(*[
+        np.stack([np.asarray(getattr(c, f), np.float32) for c in cams])
+        for f in Camera._fields
+    ])
+
+
+def default_buckets(max_batch: int) -> tuple[int, ...]:
+    """Powers of two up to ``max_batch`` (always including max_batch)."""
+    b, out = 1, []
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+class MicroBatcher:
+    """FIFO-fair request queue emitting fixed-bucket micro-batches.
+
+    ``next_batch`` drains up to ``max_batch`` requests of the level whose head
+    request is oldest (so no level starves), then pads the camera stack to
+    the smallest bucket >= the group size by repeating the last camera; the
+    padded lanes are rendered and discarded.
+    """
+
+    def __init__(self, *, max_batch: int = 8, buckets: tuple[int, ...] | None = None):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self.buckets = tuple(sorted(buckets or default_buckets(max_batch)))
+        assert self.buckets[-1] >= max_batch
+        self._queues: dict[int, collections.deque[RenderRequest]] = collections.defaultdict(collections.deque)
+
+    def submit(self, req: RenderRequest) -> int:
+        self._queues[req.level].append(req)
+        return req.request_id
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def next_batch(self) -> MicroBatch | None:
+        """Pop the oldest level-group as one padded micro-batch (None if idle)."""
+        live = [(q[0].request_id, lvl) for lvl, q in self._queues.items() if q]
+        if not live:
+            return None
+        _, lvl = min(live)  # request ids are monotonic -> oldest head wins
+        q = self._queues[lvl]
+        reqs = [q.popleft() for _ in range(min(len(q), self.max_batch))]
+        bucket = self.bucket_for(len(reqs))
+        padded = reqs + [reqs[-1]] * (bucket - len(reqs))
+        return MicroBatch(
+            level=lvl,
+            requests=tuple(reqs),
+            cams=stack_cameras(r.cam for r in padded),
+            bucket=bucket,
+        )

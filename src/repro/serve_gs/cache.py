@@ -1,0 +1,98 @@
+"""LRU frame cache keyed by quantized camera pose.
+
+Post hoc exploration revisits poses constantly (orbit playback, multiple
+clients on the same trajectory, scrubbing back and forth). Exact float poses
+never collide, so keys quantize the extrinsics/intrinsics: poses within the
+quantum render identically for all practical purposes and share one entry.
+The cache also keys on the LOD level — the same pose at a different level is
+a different frame.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+from repro.core.projection import Camera
+
+
+def quantize_camera(
+    cam: Camera,
+    *,
+    pose_quantum: float = 1e-3,
+    focal_quantum: float = 0.5,
+) -> tuple:
+    """Hashable key for a camera: viewmat and intrinsics rounded to quanta.
+
+    ``pose_quantum`` applies to every viewmat entry (rotation entries live in
+    [-1, 1], translation in scene units); ``focal_quantum`` to fx/fy/cx/cy in
+    pixels. Two cameras closer than half a quantum in every entry share a key.
+    """
+    vm = np.asarray(cam.viewmat, np.float64)
+    pose = tuple(int(v) for v in np.round(vm.reshape(-1) / pose_quantum))
+    intr = tuple(
+        int(np.round(float(np.asarray(x)) / focal_quantum))
+        for x in (cam.fx, cam.fy, cam.cx, cam.cy)
+    )
+    return pose + intr
+
+
+def frame_key(
+    cam: Camera,
+    level: int,
+    *,
+    pose_quantum: float = 1e-3,
+    focal_quantum: float = 0.5,
+) -> tuple:
+    return (int(level),) + quantize_camera(
+        cam, pose_quantum=pose_quantum, focal_quantum=focal_quantum
+    )
+
+
+class FrameCache:
+    """Bounded LRU mapping frame keys -> rendered frames, with hit metrics."""
+
+    def __init__(self, capacity: int = 512):
+        assert capacity >= 0
+        self.capacity = capacity
+        self._store: collections.OrderedDict[tuple, np.ndarray] = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key: tuple) -> np.ndarray | None:
+        frame = self._store.get(key)
+        if frame is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return frame
+
+    def put(self, key: tuple, frame: np.ndarray) -> None:
+        if self.capacity == 0:
+            return
+        if key in self._store:
+            self._store.move_to_end(key)
+        self._store[key] = frame
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "size": len(self._store),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": round(self.hit_rate, 4),
+        }

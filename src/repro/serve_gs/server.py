@@ -1,0 +1,206 @@
+"""The render server: queue -> LOD select -> cache -> batched jitted render.
+
+Turns a trained ``GaussianModel`` into a service. Requests are admitted via
+``submit`` (cache hits complete immediately); ``step`` drains one micro-batch
+through the vmap-ed distributed render; ``run`` drains everything pending.
+All orchestration is host-side Python — the device only ever sees fixed-shape
+(level, bucket) batched render calls, so steady-state serving never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.core import gaussians as G
+from repro.core.config import GSConfig
+from repro.core.projection import Camera, look_at_camera
+from repro.core.train import make_batched_eval_render
+from repro.serve_gs.batcher import (
+    MicroBatch,
+    MicroBatcher,
+    RenderRequest,
+    default_buckets,
+    stack_cameras,
+)
+from repro.serve_gs.cache import FrameCache, frame_key
+from repro.serve_gs.lod import LODPyramid, build_lod_pyramid, select_level
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+class RenderServer:
+    """Batched, LOD-aware, cached render service over a trained model."""
+
+    def __init__(
+        self,
+        params: G.GaussianModel,
+        cfg: GSConfig,
+        *,
+        mesh=None,
+        n_levels: int = 3,
+        keep_ratio: float = 0.5,
+        max_batch: int = 8,
+        buckets: tuple[int, ...] | None = None,
+        cache_capacity: int = 512,
+        pose_quantum: float = 1e-3,
+        store_frames: bool = True,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh if mesh is not None else jax.make_mesh((1, 1), ("data", "model"))
+        self.pose_quantum = pose_quantum
+        self.store_frames = store_frames
+
+        # Micro-batches shard over the mesh's data axis, so every bucket must
+        # be a multiple of it: a d-device data axis renders a bucket-d batch
+        # one view per device — batching IS the data parallelism.
+        d = self.mesh.shape["data"]
+        max_batch = d * max(-(-max_batch // d), 1)  # round up to a multiple of d
+        if buckets is None:
+            buckets = tuple(d * b for b in default_buckets(max(max_batch // d, 1)))
+        assert all(b % d == 0 for b in buckets), (buckets, d)
+
+        self.pyramid: LODPyramid = build_lod_pyramid(
+            params, n_levels=n_levels, keep_ratio=keep_ratio, pad_quantum=cfg.pad_quantum
+        )
+        shard = NamedSharding(self.mesh, PS("model"))
+        self._level_params = tuple(
+            jax.device_put(lvl, G.GaussianModel(*([shard] * 5))) for lvl in self.pyramid.levels
+        )
+        # A level with keep_ratio**k of the Gaussians needs proportionally
+        # fewer splats per tile: compositing is O(tiles x k_per_tile) and is
+        # the dominant render term, so shrinking K is what actually makes a
+        # coarse level cheap (pruning alone only shrinks project/sort/bin).
+        self._level_cfgs = tuple(
+            dataclasses.replace(
+                cfg,
+                k_per_tile=max(int(cfg.k_per_tile * keep_ratio**lvl), 32),
+            )
+            for lvl in range(self.pyramid.n_levels)
+        )
+        self._level_render = tuple(
+            make_batched_eval_render(self.mesh, c) for c in self._level_cfgs
+        )
+
+        self.batcher = MicroBatcher(max_batch=max_batch, buckets=buckets)
+        self.cache = FrameCache(cache_capacity)
+        self.frames: dict[int, np.ndarray] = {}
+
+        # ---- metrics
+        self._latencies: list[float] = []
+        self._render_s = 0.0
+        self._render_calls = 0
+        self._level_requests = [0] * self.pyramid.n_levels
+        self._batch_sizes: list[int] = []
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self.completed = 0
+
+    def warmup(self, buckets: tuple[int, ...] | None = None) -> float:
+        """Pre-compile every (level, bucket) render variant; returns seconds.
+
+        Serving latency then never includes a jit trace — the cold-start cost
+        is paid here, before the first client connects. Does not touch the
+        serving metrics or the cache.
+        """
+        buckets = buckets or self.batcher.buckets
+        c = self.pyramid.scene_center
+        eye = c + np.float32([0.0, 0.0, 3.0 * self.pyramid.scene_extent])
+        cam = look_at_camera(
+            eye, c, [0.0, 1.0, 0.0],
+            self.cfg.img_w, self.cfg.img_w, self.cfg.img_w / 2, self.cfg.img_h / 2,
+        )
+        cam = Camera(*[np.asarray(x) for x in cam])
+        t0 = time.perf_counter()
+        for lp, render in zip(self._level_params, self._level_render):
+            for b in buckets:
+                jax.block_until_ready(render(lp, stack_cameras([cam] * b)))
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------ admit
+    def submit(self, cam: Camera, *, client_id: int = -1, t_submit: float | None = None) -> int:
+        """Admit one camera request; returns its request id.
+
+        Cache hits complete synchronously (the frame is already on the host);
+        misses are queued for the next micro-batch.
+        """
+        t = time.perf_counter() if t_submit is None else t_submit
+        if self._t_first is None:
+            self._t_first = t
+        level = select_level(self.pyramid, cam, img_w=self.cfg.img_w)
+        key = frame_key(cam, level, pose_quantum=self.pose_quantum)
+        req = RenderRequest(cam=cam, level=level, t_submit=t, client_id=client_id, cache_key=key)
+        self._level_requests[level] += 1
+
+        frame = self.cache.get(key)
+        if frame is not None:
+            self._complete(req, frame)
+            return req.request_id
+        self.batcher.submit(req)
+        return req.request_id
+
+    # ------------------------------------------------------------------ serve
+    def step(self) -> int:
+        """Render one micro-batch; returns the number of requests completed."""
+        mb: MicroBatch | None = self.batcher.next_batch()
+        if mb is None:
+            return 0
+        t0 = time.perf_counter()
+        imgs = self._level_render[mb.level](
+            self._level_params[mb.level], jax.tree_util.tree_map(np.asarray, mb.cams)
+        )
+        imgs = np.asarray(jax.block_until_ready(imgs))
+        self._render_s += time.perf_counter() - t0
+        self._render_calls += 1
+        self._batch_sizes.append(len(mb.requests))
+        for i, req in enumerate(mb.requests):
+            frame = imgs[i].copy()  # own buffer: never pin the whole batch
+            self.cache.put(req.cache_key, frame)
+            self._complete(req, frame)
+        return len(mb.requests)
+
+    def run(self) -> int:
+        """Drain the queue; returns total requests completed by this call."""
+        done = 0
+        while self.batcher.pending:
+            done += self.step()
+        return done
+
+    def _complete(self, req: RenderRequest, frame: np.ndarray) -> None:
+        now = time.perf_counter()
+        self._t_last = now
+        self._latencies.append(now - req.t_submit)
+        self.completed += 1
+        if self.store_frames:
+            self.frames[req.request_id] = frame
+
+    # ---------------------------------------------------------------- metrics
+    def report(self) -> dict:
+        wall = (self._t_last - self._t_first) if (self._t_first is not None and self._t_last) else 0.0
+        lat_ms = [x * 1e3 for x in self._latencies]
+        return {
+            "completed": self.completed,
+            "wall_s": round(wall, 4),
+            "frames_per_s": round(self.completed / wall, 2) if wall > 0 else float("inf"),
+            "latency_ms": {
+                "p50": round(_percentile(lat_ms, 50), 3),
+                "p99": round(_percentile(lat_ms, 99), 3),
+                "max": round(max(lat_ms), 3) if lat_ms else 0.0,
+            },
+            "render": {
+                "calls": self._render_calls,
+                "total_s": round(self._render_s, 4),
+                "mean_batch": round(float(np.mean(self._batch_sizes)), 2) if self._batch_sizes else 0.0,
+            },
+            "cache": self.cache.stats(),
+            "lod": {
+                "live_counts": list(self.pyramid.live_counts),
+                "padded_counts": [lvl.n for lvl in self.pyramid.levels],
+                "requests_per_level": list(self._level_requests),
+            },
+        }

@@ -2,6 +2,9 @@
 params3d gather mode's packed-splat equivalence)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import projection as P

@@ -17,7 +17,10 @@ def mesh():
     # divisibility; build a fake 16x16 mesh via AbstractMesh
     from jax.sharding import AbstractMesh
 
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def _leaves_with_specs(cfg, mesh):
