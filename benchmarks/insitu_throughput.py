@@ -1,0 +1,174 @@
+"""Streaming reconstruction benchmark: warm-start vs cold-start, per-timestep
+wall-clock, recompile count, temporal-store compression.
+
+Methodology: one time-varying synthetic stream (T timesteps). The *warm*
+pipeline cold-starts at t=0 and warm-starts every later timestep (params +
+Adam moments carried over, dead slots reseeded), with a PSNR-vs-steps curve
+recorded per timestep. For every t >= 1 a *cold baseline* trains the same
+timestep from scratch at the same fixed capacity and step budget. The target
+PSNR for timestep t is the cold baseline's final PSNR (minus a small
+tolerance); steps-to-target are read off both curves. Emits one JSON report:
+
+  warm_steps_to_target[t] < cold_steps_to_target[t]  on >= 2 consecutive t
+  recompile_count == 1 (one jitted train-step trace for the whole sequence)
+
+  PYTHONPATH=src python benchmarks/insitu_throughput.py --smoke --out report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core.config import GSConfig
+from repro.insitu import InsituTrainer, TemporalCheckpointStore
+from repro.volume.timevary import GENERATORS, synthetic_stream
+
+
+def steps_to_target(curve: list, target: float) -> int | None:
+    """First recorded step whose PSNR reaches ``target`` (None if never)."""
+    for step, p in curve:
+        if p >= target:
+            return int(step)
+    return None
+
+
+def make_trainer(cfg, mesh, args, *, capacity=None, eval_every):
+    return InsituTrainer(
+        cfg, mesh,
+        capacity=capacity,
+        capacity_factor=args.capacity_factor,
+        cold_steps=args.cold_steps,
+        warm_steps=args.cold_steps,  # same budget as cold: fairness of steps-to-target
+        n_views=args.views, max_points=args.max_points,
+        n_steps_raymarch=args.raymarch_steps, init_scale=0.06,
+        eval_every=eval_every, seed=args.seed,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced CPU config")
+    ap.add_argument("--dataset", choices=list(GENERATORS), default="miranda")
+    ap.add_argument("--timesteps", type=int, default=4)
+    ap.add_argument("--t1", type=float, default=0.25)
+    ap.add_argument("--volume-res", type=int, default=40)
+    ap.add_argument("--res", type=int, default=56)
+    ap.add_argument("--views", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--max-points", type=int, default=1200)
+    ap.add_argument("--cold-steps", type=int, default=120)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--raymarch-steps", type=int, default=48)
+    ap.add_argument("--capacity-factor", type=float, default=1.5)
+    ap.add_argument("--target-tol-db", type=float, default=0.1)
+    ap.add_argument("--keyframe-interval", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.timesteps = min(args.timesteps, 3)
+        args.volume_res, args.res = 32, 48
+        args.max_points = min(args.max_points, 800)
+        args.cold_steps = min(args.cold_steps, 80)
+        args.t1 = min(args.t1, 0.15)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = GSConfig(
+        img_h=args.res, img_w=args.res, batch_size=args.batch,
+        k_per_tile=128 if args.smoke else 256,
+        max_steps=args.cold_steps * args.timesteps,
+        densify_from=10**9, opacity_reset_interval=10**9,
+    )
+    vols = list(synthetic_stream(args.dataset, args.timesteps, res=args.volume_res, t1=args.t1))
+
+    # ---- warm pipeline over the whole stream, with temporal checkpoints
+    store = TemporalCheckpointStore(
+        os.path.join(tempfile.mkdtemp(prefix="insitu_bench_"), "seq"),
+        keyframe_interval=args.keyframe_interval,
+    )
+    warm = make_trainer(cfg, mesh, args, eval_every=args.eval_every)
+    warm_reports = warm.run(iter(vols), store=store)
+
+    # ---- cold baselines: from-scratch at each later timestep, same capacity
+    rows = [{
+        "t": 0,
+        "mode": "cold_start",
+        "steps": warm_reports[0].steps,
+        "psnr_after": round(warm_reports[0].psnr_after, 3),
+        "train_s": round(warm_reports[0].train_s, 3),
+        "wall_s": round(warm_reports[0].wall_s, 3),
+    }]
+    fewer = []
+    cold = make_trainer(cfg, mesh, args, capacity=warm.capacity, eval_every=args.eval_every)
+    for t in range(1, args.timesteps):
+        if cold.state is not None:
+            cold.reset()  # keep the jitted fns: no retrace per baseline
+        cold_rep = cold.start(vols[t])
+        target = cold_rep.psnr_after - args.target_tol_db
+        w_rep = warm_reports[t]
+        w_steps = steps_to_target(w_rep.psnr_curve, target)
+        c_steps = steps_to_target(cold_rep.psnr_curve, target)
+        fewer.append(w_steps is not None and c_steps is not None and w_steps < c_steps)
+        rows.append({
+            "t": t,
+            "target_psnr": round(target, 3),
+            "warm": {
+                "steps_to_target": w_steps,
+                "psnr_before": round(w_rep.psnr_before, 3),
+                "psnr_after": round(w_rep.psnr_after, 3),
+                "n_reseeded": w_rep.n_reseeded,
+                "train_s": round(w_rep.train_s, 3),
+                "wall_s": round(w_rep.wall_s, 3),
+                "curve": [(s, round(p, 3)) for s, p in w_rep.psnr_curve],
+            },
+            "cold": {
+                "steps_to_target": c_steps,
+                "psnr_after": round(cold_rep.psnr_after, 3),
+                "train_s": round(cold_rep.train_s, 3),
+                "curve": [(s, round(p, 3)) for s, p in cold_rep.psnr_curve],
+            },
+            "warm_fewer_steps": fewer[-1],
+        })
+
+    consec = 0
+    best_consec = 0
+    for f in fewer:
+        consec = consec + 1 if f else 0
+        best_consec = max(best_consec, consec)
+    report = {
+        "config": {
+            "dataset": args.dataset, "timesteps": args.timesteps,
+            "volume_res": args.volume_res, "res": args.res,
+            "capacity": warm.capacity, "cold_steps": args.cold_steps,
+            "eval_every": args.eval_every, "target_tol_db": args.target_tol_db,
+        },
+        "timesteps": rows,
+        "recompile_count": warm.n_traces,
+        "per_timestep_wall_s": [round(r.wall_s, 3) for r in warm_reports],
+        "warm_fewer_steps_consecutive": best_consec,
+        "store": store.stats(),
+        "acceptance": {
+            "warm_fewer_on_2_consecutive": best_consec >= 2,
+            "single_train_step_trace": warm.n_traces == 1,
+        },
+    }
+    out = json.dumps(report, indent=1)
+    print(out)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(out)
+    assert report["acceptance"]["single_train_step_trace"], report["recompile_count"]
+    assert report["acceptance"]["warm_fewer_on_2_consecutive"], fewer
+
+
+if __name__ == "__main__":
+    main()

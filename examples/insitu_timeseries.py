@@ -1,71 +1,53 @@
 """In-situ-style streaming reconstruction (the paper's future-work item).
 
-A simulation produces a time-evolving volume; instead of writing full
-volume dumps (the I/O burden the paper wants to avoid), each timestep is
-reconstructed as a compact Gaussian model, WARM-STARTED from the previous
-step's model — few optimization steps per timestep, since the isosurface
-moves smoothly.
+A simulation produces a time-evolving volume; instead of writing full volume
+dumps (the I/O burden the paper wants to avoid), each timestep is absorbed
+into one fixed-capacity Gaussian model WARM-STARTED from the previous step —
+few optimization steps per timestep, one jit trace for the whole sequence.
+This is the ``repro.insitu`` subsystem end-to-end: an in-situ callback stream,
+the incremental trainer, temporal (keyframe + quantized delta) checkpoints,
+and a time-scrubbing render across the stored sequence.
 
   PYTHONPATH=src python examples/insitu_timeseries.py
 """
-import time
+import os
+import tempfile
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import gaussians as G
 from repro.core.config import GSConfig
-from repro.core.losses import psnr
-from repro.core.train import init_state, make_eval_render, make_train_step, state_shardings
-from repro.data.views import ViewDataset
-from repro.volume.datasets import VolumeSpec, miranda_like
-from repro.volume.isosurface import extract_isosurface_points
-
-
-def evolving_volume(t: float, res: int = 40) -> VolumeSpec:
-    """Mixing-layer field whose interface advances with simulation time."""
-    base = miranda_like(res=res)
-    x = np.linspace(-1, 1, res, dtype=np.float32)
-    z = x[None, None, :]
-    drift = 0.25 * np.sin(2.0 * np.pi * t) * np.cos(3.0 * z)
-    return VolumeSpec(base.field + drift.astype(np.float32) * 0.3, base.isovalue, base.extent, f"insitu_t{t:.2f}")
+from repro.insitu import InsituTrainer, TemporalCheckpointStore, build_timeline_server, scrub
+from repro.serve_gs import front_camera
+from repro.volume.timevary import synthetic_stream
 
 
 def main():
     H = 48
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    cfg = GSConfig(img_h=H, img_w=H, batch_size=2, k_per_tile=128)
-    step_fn = make_train_step(mesh, cfg)
-    eval_fn = make_eval_render(mesh, cfg)
+    cfg = GSConfig(
+        img_h=H, img_w=H, batch_size=2, k_per_tile=128, max_steps=200,
+        densify_from=10**9, opacity_reset_interval=10**9,
+    )
 
-    state = None
-    for ti, t in enumerate(np.linspace(0, 0.5, 4)):
-        vol = evolving_volume(float(t))
-        pts, _, cols = extract_isosurface_points(vol, max_points=1200, seed=0)
-        data = ViewDataset(vol, n_views=6, img_h=H, img_w=H, cache_dir=None, n_steps_raymarch=48)
+    # the "simulation": a Miranda-like mixing layer growing over 4 timesteps
+    stream = synthetic_stream("miranda", 4, res=32, t1=0.2)
+    store = TemporalCheckpointStore(
+        os.path.join(tempfile.mkdtemp(prefix="insitu_example_"), "seq"), keyframe_interval=4
+    )
+    trainer = InsituTrainer(
+        cfg, mesh, cold_steps=60, warm_steps=15, n_views=6,
+        max_points=800, n_steps_raymarch=48, init_scale=0.06, verbose=True,
+    )
+    trainer.run(stream, store=store)
+    print(f"train-step traces across the sequence: {trainer.n_traces} (fixed capacity -> 1)")
+    print(f"temporal store: {store.stats()}")
 
-        if state is None:
-            # cold start at t=0: full init from the extracted points
-            pad = (-pts.shape[0]) % 256
-            pts_p = np.concatenate([pts, np.full((pad, 3), 1e6, np.float32)])
-            cols_p = np.concatenate([cols, np.zeros((pad, 3), np.float32)])
-            g = G.init_from_points(jnp.asarray(pts_p), jnp.asarray(cols_p), init_scale=0.06)
-            state = jax.device_put(init_state(g), state_shardings(mesh))
-            n_steps = 40
-        else:
-            # warm start: keep the previous model, just continue optimizing
-            n_steps = 12
-
-        t0 = time.time()
-        for cams, gt in data.batches(cfg.batch_size, steps=n_steps):
-            state, m = step_fn(state, cams, gt)
-        cam0, gt0 = data.view(0)
-        img, _ = eval_fn(state.params, cam0)
-        print(
-            f"t={t:.2f}  {'cold' if ti == 0 else 'warm'}-start {n_steps:2d} steps "
-            f"({time.time()-t0:5.1f}s)  loss {float(m['loss']):.4f}  PSNR {float(psnr(img, gt0)):5.2f} dB"
-        )
+    # post hoc time-scrub: one camera, every stored timestep
+    server = build_timeline_server(store, cfg, n_levels=2, max_batch=2)
+    cam = front_camera(server.pyramid, img_h=H, img_w=H)
+    frames = scrub(server, cam, store.timesteps())
+    for t, frame in frames.items():
+        print(f"  t={t}: frame {frame.shape}, surface pixels {(frame.sum(-1) > 0.01).mean():.1%}")
 
 
 if __name__ == "__main__":

@@ -28,13 +28,29 @@ def _flatten(tree):
     return out, treedef
 
 
+def _leaf_to_host(leaf) -> np.ndarray:
+    """Pull one (possibly sharded) leaf to host, shard by shard.
+
+    Assembling from ``addressable_shards`` avoids materializing a second
+    fully-replicated device copy the way a whole-leaf ``device_get`` on a
+    sharded array can; each shard is copied into its slice of one host
+    buffer. Non-jax leaves (numpy, python scalars) pass straight through.
+    """
+    if isinstance(leaf, jax.Array) and getattr(leaf, "is_fully_addressable", False):
+        out = np.empty(leaf.shape, dtype=leaf.dtype)
+        for shard in leaf.addressable_shards:
+            out[shard.index] = np.asarray(shard.data)
+        return out
+    return np.asarray(jax.device_get(leaf))
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     flat, _ = _flatten(tree)
     manifest = {}
     for key, leaf in flat.items():
-        arr = np.asarray(jax.device_get(leaf))
+        arr = _leaf_to_host(leaf)
         np.save(os.path.join(d, key + ".npy"), arr)
         manifest[key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
     with open(os.path.join(d, "manifest.json"), "w") as f:

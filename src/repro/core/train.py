@@ -233,7 +233,15 @@ def make_train_step(
         out_specs=(st_specs, {"loss": PS()}),
         check_vma=False,
     )
-    return jax.jit(stepped)
+    # Pin output shardings to the exact NamedShardings of state_shardings():
+    # on size-1 mesh axes XLA otherwise normalizes some outputs to PS(), so
+    # feeding step t's output state back as step t+1's input would retrace.
+    # One trace per Gaussian capacity is what the streaming trainer
+    # (repro.insitu) relies on across a whole timestep sequence.
+    out_shardings = jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), (st_specs, {"loss": PS()})
+    )
+    return jax.jit(stepped, out_shardings=out_shardings)
 
 
 def make_eval_render(mesh: Mesh, cfg: GSConfig, *, model_axis: str = "model"):

@@ -57,12 +57,25 @@ class ViewDataset:
 
     def batches(self, batch_size: int, *, steps: int):
         """Yield (Camera batch, gt batch) `steps` times (with replacement
-        across epochs, without within an epoch — 3D-GS convention)."""
+        across epochs, without within an epoch — 3D-GS convention). When an
+        epoch runs low the next permutation is *prepended*, so the leftover
+        views are still drawn before any view repeats: every view is sampled
+        exactly once per epoch. At the epoch seam a draw that would duplicate
+        a view already in the batch is swapped deeper into the new
+        permutation (possible whenever batch_size <= n_views)."""
         order = []
         for _ in range(steps):
-            if len(order) < batch_size:
-                order = list(self.rng.permutation(self.n_views))
-            sel = np.asarray([order.pop() for _ in range(batch_size)])
+            sel = []
+            for _ in range(batch_size):
+                if not order:
+                    order = list(self.rng.permutation(self.n_views))
+                if order[-1] in sel:
+                    for j in range(len(order) - 1):
+                        if order[j] not in sel:
+                            order[-1], order[j] = order[j], order[-1]
+                            break
+                sel.append(order.pop())
+            sel = np.asarray(sel)
             yield camera_slice(self.cams, jnp.asarray(sel)), jnp.asarray(self.gt[sel])
 
     def view(self, i: int):

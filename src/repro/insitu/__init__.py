@@ -1,0 +1,31 @@
+"""Streaming time-varying volume reconstruction (the paper's in-situ goal).
+
+The static pipeline trains one volume from scratch; this subsystem consumes a
+*sequence* of evolving timesteps (``repro.volume.timevary``) and keeps one
+fixed-capacity Gaussian model tracking the isosurface:
+
+  stream -> extract -> reseed dead slots -> warm-start delta-optimize
+         -> temporal checkpoint (keyframe + quantized delta)
+         -> time-scrub serving (timeline RenderServer)
+
+See ``repro.launch.insitu`` for the CLI driver and
+``benchmarks/insitu_throughput.py`` for the warm-vs-cold methodology.
+"""
+from repro.insitu.serve import build_timeline_server, scrub
+from repro.insitu.store import TemporalCheckpointStore
+from repro.insitu.trainer import (
+    InsituTrainer,
+    TimestepReport,
+    fixed_capacity_init,
+    reseed_dead_slots,
+)
+
+__all__ = [
+    "InsituTrainer",
+    "TemporalCheckpointStore",
+    "TimestepReport",
+    "build_timeline_server",
+    "fixed_capacity_init",
+    "reseed_dead_slots",
+    "scrub",
+]

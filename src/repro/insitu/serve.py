@@ -1,0 +1,46 @@
+"""Time-scrub serving: a temporal checkpoint store -> timeline RenderServer.
+
+Post hoc exploration of a streamed reconstruction is scrubbing: the client
+holds a camera and drags a time slider; every (timestep, pose) frame should
+be servable at interactive rates and cacheable. This module assembles a
+``RenderServer`` whose timeline is the store's timestep sequence — one LOD
+pyramid per timestep, all sharing the per-level jitted render fns (a
+fixed-capacity insitu run is shape-uniform, so the whole timeline compiles
+once per (level, bucket)).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.config import GSConfig
+from repro.core.projection import Camera
+from repro.insitu.store import TemporalCheckpointStore
+from repro.serve_gs import RenderServer
+
+
+def build_timeline_server(
+    store: TemporalCheckpointStore,
+    cfg: GSConfig,
+    *,
+    timesteps: list[int] | None = None,
+    **server_kw,
+) -> RenderServer:
+    """Load (a subset of) the stored sequence into one timeline server."""
+    ts = timesteps if timesteps is not None else store.timesteps()
+    assert ts, "temporal store is empty"
+    server = RenderServer(store.load(ts[0]), cfg, timestep=ts[0], **server_kw)
+    for t in ts[1:]:
+        server.add_timestep(t, store.load(t))
+    return server
+
+
+def scrub(server: RenderServer, cam: Camera, timesteps: list[int]) -> dict[int, np.ndarray]:
+    """Request the same camera across ``timesteps``; returns t -> frame.
+
+    The playback primitive: a client dragging the time slider at a fixed
+    viewpoint. Frames come back per-timestep distinct and individually
+    cached (a second scrub over the same range is all cache hits).
+    """
+    ids = {t: server.submit(cam, timestep=t) for t in timesteps}
+    server.run()
+    return {t: server.frames[rid] for t, rid in ids.items()}

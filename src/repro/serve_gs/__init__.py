@@ -11,14 +11,16 @@ from repro.serve_gs.client import OrbitClient, make_clients, run_load
 from repro.serve_gs.lod import (
     LODPyramid,
     build_lod_pyramid,
+    front_camera,
     importance_scores,
     screen_coverage,
     select_level,
 )
-from repro.serve_gs.server import RenderServer
+from repro.serve_gs.server import RenderServer, TimestepModels
 
 __all__ = [
     "FrameCache",
+    "TimestepModels",
     "LODPyramid",
     "MicroBatch",
     "MicroBatcher",
@@ -27,6 +29,7 @@ __all__ = [
     "RenderServer",
     "build_lod_pyramid",
     "frame_key",
+    "front_camera",
     "importance_scores",
     "make_clients",
     "quantize_camera",

@@ -29,6 +29,7 @@ class RenderRequest:
     t_submit: float = 0.0
     client_id: int = -1
     cache_key: tuple | None = None
+    timestep: int = 0                    # timeline position (time-scrubbing)
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
 
@@ -40,6 +41,7 @@ class MicroBatch:
     requests: tuple[RenderRequest, ...]  # the len(requests) real entries
     cams: Camera                         # stacked (bucket, ...) camera pytree
     bucket: int
+    timestep: int = 0
 
 
 def stack_cameras(cams: Iterable[Camera]) -> Camera:
@@ -64,10 +66,12 @@ def default_buckets(max_batch: int) -> tuple[int, ...]:
 class MicroBatcher:
     """FIFO-fair request queue emitting fixed-bucket micro-batches.
 
-    ``next_batch`` drains up to ``max_batch`` requests of the level whose head
-    request is oldest (so no level starves), then pads the camera stack to
-    the smallest bucket >= the group size by repeating the last camera; the
-    padded lanes are rendered and discarded.
+    Requests group by (timestep, level) — both select a distinct model on the
+    device, so a micro-batch must be homogeneous in them. ``next_batch``
+    drains up to ``max_batch`` requests of the group whose head request is
+    oldest (so no group starves), then pads the camera stack to the smallest
+    bucket >= the group size by repeating the last camera; the padded lanes
+    are rendered and discarded.
     """
 
     def __init__(self, *, max_batch: int = 8, buckets: tuple[int, ...] | None = None):
@@ -75,10 +79,12 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.buckets = tuple(sorted(buckets or default_buckets(max_batch)))
         assert self.buckets[-1] >= max_batch
-        self._queues: dict[int, collections.deque[RenderRequest]] = collections.defaultdict(collections.deque)
+        self._queues: dict[tuple[int, int], collections.deque[RenderRequest]] = collections.defaultdict(
+            collections.deque
+        )
 
     def submit(self, req: RenderRequest) -> int:
-        self._queues[req.level].append(req)
+        self._queues[(req.timestep, req.level)].append(req)
         return req.request_id
 
     @property
@@ -92,12 +98,14 @@ class MicroBatcher:
         return self.buckets[-1]
 
     def next_batch(self) -> MicroBatch | None:
-        """Pop the oldest level-group as one padded micro-batch (None if idle)."""
-        live = [(q[0].request_id, lvl) for lvl, q in self._queues.items() if q]
+        """Pop the oldest (timestep, level) group as one padded micro-batch
+        (None if idle)."""
+        live = [(q[0].request_id, key) for key, q in self._queues.items() if q]
         if not live:
             return None
-        _, lvl = min(live)  # request ids are monotonic -> oldest head wins
-        q = self._queues[lvl]
+        _, key = min(live)  # request ids are monotonic -> oldest head wins
+        ts, lvl = key
+        q = self._queues[key]
         reqs = [q.popleft() for _ in range(min(len(q), self.max_batch))]
         bucket = self.bucket_for(len(reqs))
         padded = reqs + [reqs[-1]] * (bucket - len(reqs))
@@ -106,4 +114,5 @@ class MicroBatcher:
             requests=tuple(reqs),
             cams=stack_cameras(r.cam for r in padded),
             bucket=bucket,
+            timestep=ts,
         )

@@ -41,10 +41,13 @@ def frame_key(
     cam: Camera,
     level: int,
     *,
+    timestep: int = 0,
     pose_quantum: float = 1e-3,
     focal_quantum: float = 0.5,
 ) -> tuple:
-    return (int(level),) + quantize_camera(
+    """Cache key for a frame: the same pose at another LOD level *or another
+    timeline position* is a different frame (time-scrubbing correctness)."""
+    return (int(timestep), int(level)) + quantize_camera(
         cam, pose_quantum=pose_quantum, focal_quantum=focal_quantum
     )
 
@@ -81,6 +84,14 @@ class FrameCache:
         while len(self._store) > self.capacity:
             self._store.popitem(last=False)
             self.evictions += 1
+
+    def drop(self, predicate) -> int:
+        """Invalidate every entry whose key matches ``predicate``; returns the
+        count dropped (e.g. all frames of a replaced timeline timestep)."""
+        keys = [k for k in self._store if predicate(k)]
+        for k in keys:
+            del self._store[k]
+        return len(keys)
 
     @property
     def hit_rate(self) -> float:

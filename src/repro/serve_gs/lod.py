@@ -15,7 +15,7 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.core import gaussians as G
-from repro.core.projection import Camera
+from repro.core.projection import Camera, look_at_camera
 
 # means/opacity used by the training pipeline to mark padded (dead) Gaussians
 DEAD_MEAN = 1.0e6
@@ -122,6 +122,15 @@ def build_lod_pyramid(
         levels.append(_pad_model(sub, n_padded))
         counts.append(n_keep)
     return LODPyramid(tuple(levels), tuple(counts), center.astype(np.float32), extent)
+
+
+def front_camera(pyr: LODPyramid, *, img_h: int, img_w: int, dist_factor: float = 3.0) -> Camera:
+    """Canonical head-on framing of the pyramid's scene: the one default
+    viewpoint shared by server warmup, smoke drivers, and examples."""
+    center = pyr.scene_center
+    eye = center + np.float32([0.0, 0.0, dist_factor * pyr.scene_extent])
+    cam = look_at_camera(eye, center, [0.0, 1.0, 0.0], img_w, img_w, img_w / 2, img_h / 2)
+    return Camera(*[np.asarray(x) for x in cam])
 
 
 def screen_coverage(pyr: LODPyramid, cam: Camera, *, img_w: int) -> float:

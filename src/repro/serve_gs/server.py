@@ -1,15 +1,25 @@
 """The render server: queue -> LOD select -> cache -> batched jitted render.
 
-Turns a trained ``GaussianModel`` into a service. Requests are admitted via
+Turns trained ``GaussianModel``s into a service. Requests are admitted via
 ``submit`` (cache hits complete immediately); ``step`` drains one micro-batch
 through the vmap-ed distributed render; ``run`` drains everything pending.
 All orchestration is host-side Python — the device only ever sees fixed-shape
 (level, bucket) batched render calls, so steady-state serving never recompiles.
+
+The server holds a *timeline*: timestep -> (LOD pyramid, device params).
+Static scenes are the one-entry special case (timestep 0, the default).
+Streaming reconstructions (``repro.insitu``) register one model per simulation
+timestep via ``add_timestep``, and clients scrub time by submitting the same
+camera with different ``timestep`` values — each (timestep, level, pose) is a
+distinct cacheable frame. The jitted render fns are shared across the whole
+timeline (they are shape-keyed): a fixed-capacity insitu sequence reuses one
+trace per (level, bucket) for every timestep.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import NamedTuple
 
 import jax
 import numpy as np
@@ -17,7 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 
 from repro.core import gaussians as G
 from repro.core.config import GSConfig
-from repro.core.projection import Camera, look_at_camera
+from repro.core.projection import Camera
 from repro.core.train import make_batched_eval_render
 from repro.serve_gs.batcher import (
     MicroBatch,
@@ -27,15 +37,22 @@ from repro.serve_gs.batcher import (
     stack_cameras,
 )
 from repro.serve_gs.cache import FrameCache, frame_key
-from repro.serve_gs.lod import LODPyramid, build_lod_pyramid, select_level
+from repro.serve_gs.lod import LODPyramid, build_lod_pyramid, front_camera, select_level
 
 
 def _percentile(xs: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
 
 
+class TimestepModels(NamedTuple):
+    """One timeline entry: the pyramid and its device-resident levels."""
+
+    pyramid: LODPyramid
+    level_params: tuple[G.GaussianModel, ...]  # device arrays, model-sharded
+
+
 class RenderServer:
-    """Batched, LOD-aware, cached render service over a trained model."""
+    """Batched, LOD-aware, cached render service over a model timeline."""
 
     def __init__(
         self,
@@ -50,11 +67,14 @@ class RenderServer:
         cache_capacity: int = 512,
         pose_quantum: float = 1e-3,
         store_frames: bool = True,
+        timestep: int = 0,
     ):
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else jax.make_mesh((1, 1), ("data", "model"))
         self.pose_quantum = pose_quantum
         self.store_frames = store_frames
+        self.n_levels = n_levels
+        self.keep_ratio = keep_ratio
 
         # Micro-batches shard over the mesh's data axis, so every bucket must
         # be a multiple of it: a d-device data axis renders a bucket-d batch
@@ -65,13 +85,7 @@ class RenderServer:
             buckets = tuple(d * b for b in default_buckets(max(max_batch // d, 1)))
         assert all(b % d == 0 for b in buckets), (buckets, d)
 
-        self.pyramid: LODPyramid = build_lod_pyramid(
-            params, n_levels=n_levels, keep_ratio=keep_ratio, pad_quantum=cfg.pad_quantum
-        )
-        shard = NamedSharding(self.mesh, PS("model"))
-        self._level_params = tuple(
-            jax.device_put(lvl, G.GaussianModel(*([shard] * 5))) for lvl in self.pyramid.levels
-        )
+        self._shard = NamedSharding(self.mesh, PS("model"))
         # A level with keep_ratio**k of the Gaussians needs proportionally
         # fewer splats per tile: compositing is O(tiles x k_per_tile) and is
         # the dominant render term, so shrinking K is what actually makes a
@@ -81,11 +95,17 @@ class RenderServer:
                 cfg,
                 k_per_tile=max(int(cfg.k_per_tile * keep_ratio**lvl), 32),
             )
-            for lvl in range(self.pyramid.n_levels)
+            for lvl in range(n_levels)
         )
+        # one render fn per level, shared by every timeline entry — jit
+        # retraces only if a timestep brings a new padded Gaussian count
         self._level_render = tuple(
             make_batched_eval_render(self.mesh, c) for c in self._level_cfgs
         )
+
+        self._timeline: dict[int, TimestepModels] = {}
+        self._first_timestep = int(timestep)
+        self.add_timestep(timestep, params)
 
         self.batcher = MicroBatcher(max_batch=max_batch, buckets=buckets)
         self.cache = FrameCache(cache_capacity)
@@ -95,36 +115,85 @@ class RenderServer:
         self._latencies: list[float] = []
         self._render_s = 0.0
         self._render_calls = 0
-        self._level_requests = [0] * self.pyramid.n_levels
+        self._level_requests = [0] * n_levels
+        self._timestep_requests: dict[int, int] = {}
         self._batch_sizes: list[int] = []
         self._t_first: float | None = None
         self._t_last: float | None = None
         self.completed = 0
 
-    def warmup(self, buckets: tuple[int, ...] | None = None) -> float:
+    # first-entry aliases — the pre-timeline (static scene) public surface;
+    # properties so they track add_timestep() re-registering the first entry
+    @property
+    def pyramid(self) -> LODPyramid:
+        return self._timeline[self._first_timestep].pyramid
+
+    @property
+    def _level_params(self) -> tuple[G.GaussianModel, ...]:
+        return self._timeline[self._first_timestep].level_params
+
+    # --------------------------------------------------------------- timeline
+    def add_timestep(self, timestep: int, params: G.GaussianModel) -> TimestepModels:
+        """Register a model for one timeline position. Re-registering an
+        existing timestep replaces the model AND invalidates its cached
+        frames (stale frames must not outlive the model that rendered them).
+        """
+        cache = getattr(self, "cache", None)  # absent during __init__'s first entry
+        if cache is not None and int(timestep) in self._timeline:
+            cache.drop(lambda k: k[0] == int(timestep))
+        pyramid = build_lod_pyramid(
+            params,
+            n_levels=self.n_levels,
+            keep_ratio=self.keep_ratio,
+            pad_quantum=self.cfg.pad_quantum,
+        )
+        level_params = tuple(
+            jax.device_put(lvl, G.GaussianModel(*([self._shard] * 5))) for lvl in pyramid.levels
+        )
+        entry = TimestepModels(pyramid, level_params)
+        self._timeline[int(timestep)] = entry
+        return entry
+
+    def timesteps(self) -> list[int]:
+        return sorted(self._timeline)
+
+    def _entry(self, timestep: int) -> TimestepModels:
+        try:
+            return self._timeline[int(timestep)]
+        except KeyError:
+            raise KeyError(
+                f"timestep {timestep} not on the timeline (have {self.timesteps()})"
+            ) from None
+
+    def warmup(self, buckets: tuple[int, ...] | None = None, *, timesteps=None) -> float:
         """Pre-compile every (level, bucket) render variant; returns seconds.
 
         Serving latency then never includes a jit trace — the cold-start cost
-        is paid here, before the first client connects. Does not touch the
-        serving metrics or the cache.
+        is paid here, before the first client connects. One timestep suffices
+        when the timeline is shape-uniform (fixed-capacity insitu sequences);
+        pass ``timesteps`` to force-warm entries with distinct shapes. Does
+        not touch the serving metrics or the cache.
         """
         buckets = buckets or self.batcher.buckets
-        c = self.pyramid.scene_center
-        eye = c + np.float32([0.0, 0.0, 3.0 * self.pyramid.scene_extent])
-        cam = look_at_camera(
-            eye, c, [0.0, 1.0, 0.0],
-            self.cfg.img_w, self.cfg.img_w, self.cfg.img_w / 2, self.cfg.img_h / 2,
-        )
-        cam = Camera(*[np.asarray(x) for x in cam])
         t0 = time.perf_counter()
-        for lp, render in zip(self._level_params, self._level_render):
-            for b in buckets:
-                jax.block_until_ready(render(lp, stack_cameras([cam] * b)))
+        for ts in timesteps if timesteps is not None else [self.timesteps()[0]]:
+            entry = self._entry(ts)
+            cam = front_camera(entry.pyramid, img_h=self.cfg.img_h, img_w=self.cfg.img_w)
+            for lvl, lp in enumerate(entry.level_params):
+                for b in buckets:
+                    jax.block_until_ready(self._level_render[lvl](lp, stack_cameras([cam] * b)))
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------ admit
-    def submit(self, cam: Camera, *, client_id: int = -1, t_submit: float | None = None) -> int:
-        """Admit one camera request; returns its request id.
+    def submit(
+        self,
+        cam: Camera,
+        *,
+        timestep: int = 0,
+        client_id: int = -1,
+        t_submit: float | None = None,
+    ) -> int:
+        """Admit one camera request against one timeline position.
 
         Cache hits complete synchronously (the frame is already on the host);
         misses are queued for the next micro-batch.
@@ -132,10 +201,15 @@ class RenderServer:
         t = time.perf_counter() if t_submit is None else t_submit
         if self._t_first is None:
             self._t_first = t
-        level = select_level(self.pyramid, cam, img_w=self.cfg.img_w)
-        key = frame_key(cam, level, pose_quantum=self.pose_quantum)
-        req = RenderRequest(cam=cam, level=level, t_submit=t, client_id=client_id, cache_key=key)
+        entry = self._entry(timestep)
+        level = select_level(entry.pyramid, cam, img_w=self.cfg.img_w)
+        key = frame_key(cam, level, timestep=timestep, pose_quantum=self.pose_quantum)
+        req = RenderRequest(
+            cam=cam, level=level, t_submit=t, client_id=client_id, cache_key=key,
+            timestep=int(timestep),
+        )
         self._level_requests[level] += 1
+        self._timestep_requests[int(timestep)] = self._timestep_requests.get(int(timestep), 0) + 1
 
         frame = self.cache.get(key)
         if frame is not None:
@@ -150,9 +224,10 @@ class RenderServer:
         mb: MicroBatch | None = self.batcher.next_batch()
         if mb is None:
             return 0
+        entry = self._entry(mb.timestep)
         t0 = time.perf_counter()
         imgs = self._level_render[mb.level](
-            self._level_params[mb.level], jax.tree_util.tree_map(np.asarray, mb.cams)
+            entry.level_params[mb.level], jax.tree_util.tree_map(np.asarray, mb.cams)
         )
         imgs = np.asarray(jax.block_until_ready(imgs))
         self._render_s += time.perf_counter() - t0
@@ -202,5 +277,10 @@ class RenderServer:
                 "live_counts": list(self.pyramid.live_counts),
                 "padded_counts": [lvl.n for lvl in self.pyramid.levels],
                 "requests_per_level": list(self._level_requests),
+            },
+            "timeline": {
+                "timesteps": self.timesteps(),
+                "live_counts": {t: list(e.pyramid.live_counts) for t, e in sorted(self._timeline.items())},
+                "requests_per_timestep": {t: n for t, n in sorted(self._timestep_requests.items())},
             },
         }

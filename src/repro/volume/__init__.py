@@ -2,6 +2,15 @@ from repro.volume.datasets import kingsnake_like, miranda_like, VolumeSpec
 from repro.volume.isosurface import extract_isosurface_points
 from repro.volume.cameras import orbit_cameras
 from repro.volume.raymarch import render_isosurface
+from repro.volume.timevary import (
+    CallbackStream,
+    DiskStream,
+    VolumeStream,
+    dump_stream,
+    kingsnake_uncoil,
+    miranda_growth,
+    synthetic_stream,
+)
 
 __all__ = [
     "kingsnake_like",
@@ -10,4 +19,11 @@ __all__ = [
     "extract_isosurface_points",
     "orbit_cameras",
     "render_isosurface",
+    "CallbackStream",
+    "DiskStream",
+    "VolumeStream",
+    "dump_stream",
+    "kingsnake_uncoil",
+    "miranda_growth",
+    "synthetic_stream",
 ]
