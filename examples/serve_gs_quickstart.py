@@ -32,21 +32,23 @@ def main():
         params = init_params_from_volume("kingsnake", volume_res=32, max_points=800)
 
     cfg = GSConfig(img_h=args.res, img_w=args.res, k_per_tile=128)
-    server = RenderServer(params, cfg, n_levels=2, max_batch=4)
+    # store_frames off: frames arrive through each request's FrameFuture, so
+    # nothing needs to sit in the server's retirement buffer
+    server = RenderServer(params, cfg, n_levels=2, max_batch=4, store_frames=False)
 
     # one orbit: near views hit LOD 0, a far ring hits the coarser level
     near = orbit_cameras(args.views, img_h=args.res, img_w=args.res, radius=3.0)
     far = orbit_cameras(args.views, img_h=args.res, img_w=args.res, radius=7.0)
-    ids = []
+    futures = []
     for cams in (near, far):
         for i in range(args.views):
-            ids.append(server.submit(camera_slice(cams, i)))
-    server.run()
+            futures.append(server.submit(camera_slice(cams, i)))
+    server.run()  # drains the pipelined dispatch ring; futures resolve
 
     os.makedirs(args.out, exist_ok=True)
-    for k, rid in enumerate(ids):
-        write_ppm(os.path.join(args.out, f"frame_{k:03d}.ppm"), server.frames[rid])
-    print(f"wrote {len(ids)} frames to {args.out}")
+    for k, fut in enumerate(futures):
+        write_ppm(os.path.join(args.out, f"frame_{k:03d}.ppm"), fut.result())
+    print(f"wrote {len(futures)} frames to {args.out}")
     print(json.dumps(server.report(), indent=1))
 
 

@@ -39,8 +39,13 @@ def scrub(server: RenderServer, cam: Camera, timesteps: list[int]) -> dict[int, 
 
     The playback primitive: a client dragging the time slider at a fixed
     viewpoint. Frames come back per-timestep distinct and individually
-    cached (a second scrub over the same range is all cache hits).
+    cached (a second scrub over the same range is all cache hits). Frames are
+    delivered through each request's ``FrameFuture`` — no reliance on the
+    server's retirement buffer, so this works on servers built with
+    ``store_frames=False`` (the production configuration). ``run`` drains the
+    whole scrub through the pipelined dispatcher before the futures are read,
+    so awaiting them never blocks.
     """
-    ids = {t: server.submit(cam, timestep=t) for t in timesteps}
+    futures = {t: server.submit(cam, timestep=t) for t in timesteps}
     server.run()
-    return {t: server.frames[rid] for t, rid in ids.items()}
+    return {t: fut.result() for t, fut in futures.items()}

@@ -26,11 +26,25 @@ max-abs-based quantization scale for the whole leaf. Rows whose delta exceeds
 + values) and excluded from the scale; the remaining rows quantize against a
 tight scale. ``load(t)`` restores the nearest keyframe at or before t and
 replays deltas (quantized part, then exact-row overwrite).
+
+**Asynchronous writes.** Delta quantization and ``np.savez_compressed`` are
+pure host work; running them inline stalls the training loop between
+timesteps. With ``async_writes=True`` (the default) ``append`` only pulls the
+params to host (cheap, and required before the trainer mutates them again)
+and hands the encode+write to a single background writer thread, so the
+stream's next timestep trains while the previous one compresses. Appends are
+processed strictly in order (one thread, FIFO queue — the delta chain needs
+it); every read (``load``/``timesteps``/``stats``) flushes pending writes
+first, and ``flush()``/``close()`` make durability explicit. A failure in the
+writer surfaces on the next ``append``/``flush``.
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
+import threading
+import time
 
 import numpy as np
 
@@ -52,10 +66,18 @@ def _to_host(params: G.GaussianModel) -> dict[str, np.ndarray]:
 class TemporalCheckpointStore:
     """Append-only per-timestep store of ``GaussianModel`` params."""
 
-    def __init__(self, directory: str, *, keyframe_interval: int = 4, exact_jump_thresh: float = 1.0):
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keyframe_interval: int = 4,
+        exact_jump_thresh: float = 1.0,
+        async_writes: bool = True,
+    ):
         assert keyframe_interval >= 1
         self.directory = directory
         self.exact_jump_thresh = float(exact_jump_thresh)
+        self.async_writes = async_writes
         os.makedirs(directory, exist_ok=True)
         self._index_path = os.path.join(directory, "sequence.json")
         if os.path.exists(self._index_path):
@@ -73,6 +95,22 @@ class TemporalCheckpointStore:
                 "exact_jump_thresh": self.exact_jump_thresh,
                 "timesteps": [],
             }
+        # submit-side view of the sequence (the writer thread lags behind):
+        # monotonicity and key-vs-delta cadence are decided at append() time
+        self._submitted = len(self._index["timesteps"])
+        self._last_t = self._index["timesteps"][-1]["t"] if self._index["timesteps"] else None
+
+        # background writer: created lazily on the first async append
+        self._queue: queue.Queue | None = None
+        self._writer: threading.Thread | None = None
+        self._writer_err: BaseException | None = None
+        self._closed = False
+
+        # overlap metrics: host time spent inside append() (what the caller's
+        # loop pays) vs. inside the encode+write itself (what was hidden)
+        self.append_s = 0.0
+        self.write_s = 0.0
+
         # reconstructed previous frame, kept so deltas chain without drift
         self._recon: dict[str, np.ndarray] | None = None
         if self._index["timesteps"]:
@@ -80,18 +118,71 @@ class TemporalCheckpointStore:
 
     # ------------------------------------------------------------------ write
     def append(self, t: int, params: G.GaussianModel) -> str:
-        """Store timestep ``t``; returns the path written. ``t`` must be
-        strictly greater than every stored timestep."""
-        ts = self._index["timesteps"]
-        assert not ts or t > ts[-1]["t"], (t, ts[-1]["t"] if ts else None)
-        host = _to_host(params)
-        is_key = (len(ts) % self.keyframe_interval == 0) or self._recon is None
+        """Store timestep ``t``; returns the path (to be) written. ``t`` must
+        be strictly greater than every stored timestep. With async writes the
+        encode+write happens on the writer thread; call ``flush()`` (or any
+        read) to wait for durability. (If an earlier background write failed,
+        the writer may promote this frame from delta to keyframe — the index
+        records the actual kind; the predicted path is best-effort.)"""
+        assert not self._closed, "append() after close()"
+        self._raise_writer_error()
+        assert self._last_t is None or t > self._last_t, (t, self._last_t)
+        t0 = time.perf_counter()
+        is_key = (self._submitted % self.keyframe_interval == 0) or self._submitted == 0
+        self._last_t = t
+        self._submitted += 1
+        host = _to_host(params)  # must copy out before the caller mutates
         if is_key:
-            path = save_checkpoint(self.directory, t, G.GaussianModel(**host))
+            path = os.path.join(self.directory, f"step_{t:08d}")
+        else:
+            path = os.path.join(self.directory, f"delta_{t:08d}.npz")
+        if self.async_writes:
+            if self._writer is None:
+                # bounded: each entry is a full host copy of the params, so a
+                # writer slower than training must backpressure append() here
+                # rather than grow the queue (and host memory) without limit
+                self._queue = queue.Queue(maxsize=2)
+                self._writer = threading.Thread(
+                    target=self._writer_loop, name="temporal-store-writer", daemon=True
+                )
+                self._writer.start()
+            self._queue.put((t, host, is_key))
+        else:
+            self._write(t, host, is_key)
+        self.append_s += time.perf_counter() - t0
+        return path
+
+    def _writer_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                self._queue.task_done()
+                return
+            try:
+                # keep writing after a failure: _recon and the index reflect
+                # only successful writes, so later frames stay self-consistent
+                # (deltas chain against the last *stored* frame) — only the
+                # failed timestep is lost, and flush()/append() report it
+                self._write(*item)
+            except BaseException as e:  # surfaced on the next append/flush
+                if self._writer_err is None:  # first failure wins
+                    self._writer_err = (item[0], e)
+            finally:
+                self._queue.task_done()
+
+    def _write(self, t: int, host: dict[str, np.ndarray], is_key: bool) -> None:
+        """Encode + persist one timestep (writer thread in async mode)."""
+        t0 = time.perf_counter()
+        ts = self._index["timesteps"]
+        if self._recon is None:
+            # no reconstruction base (e.g. the sequence's first keyframe
+            # failed to write): a delta is impossible — promote to keyframe
+            is_key = True
+        if is_key:
+            save_checkpoint(self.directory, t, G.GaussianModel(**host))
             ts.append({"t": t, "kind": "key"})
             self._recon = host
         else:
-            path = os.path.join(self.directory, f"delta_{t:08d}.npz")
             payload, recon = {}, {}
             for name, x in host.items():
                 diff = x - self._recon[name]
@@ -111,15 +202,50 @@ class TemporalCheckpointStore:
                 payload[name + "__jump_idx"] = jump.astype(np.int32)
                 payload[name + "__jump_val"] = x[jump].astype(np.float32)
                 recon[name] = r
-            np.savez_compressed(path, **payload)
+            np.savez_compressed(os.path.join(self.directory, f"delta_{t:08d}.npz"), **payload)
             ts.append({"t": t, "kind": "delta"})
             self._recon = recon
         with open(self._index_path, "w") as f:
             json.dump(self._index, f, indent=1)
-        return path
+        self.write_s += time.perf_counter() - t0
+
+    # ------------------------------------------------------------- lifecycle
+    def _raise_writer_error(self) -> None:
+        if self._writer_err is not None:
+            (t, err), self._writer_err = self._writer_err, None
+            raise RuntimeError(
+                f"temporal store background write failed for timestep {t}; "
+                "that timestep is NOT on disk (later appends are unaffected — "
+                "deltas chain against the last successfully stored frame)"
+            ) from err
+
+    def flush(self) -> None:
+        """Block until every queued append is durable on disk."""
+        if self._queue is not None:
+            self._queue.join()
+        self._raise_writer_error()
+
+    def close(self) -> None:
+        """Flush pending writes and stop the writer thread. Idempotent."""
+        if self._closed:
+            return
+        if self._writer is not None:
+            self._queue.join()
+            self._queue.put(None)  # sentinel: writer exits after draining
+            self._writer.join()
+            self._writer = None
+        self._closed = True
+        self._raise_writer_error()
+
+    def __enter__(self) -> "TemporalCheckpointStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------- read
     def timesteps(self) -> list[int]:
+        self.flush()
         return [e["t"] for e in self._index["timesteps"]]
 
     def _entry(self, t: int) -> int:
@@ -136,6 +262,7 @@ class TemporalCheckpointStore:
 
     def load(self, t: int) -> G.GaussianModel:
         """Reconstruct timestep ``t``: nearest keyframe <= t, then deltas."""
+        self.flush()
         i = self._entry(t)
         entries = self._index["timesteps"]
         k = i
@@ -154,7 +281,9 @@ class TemporalCheckpointStore:
 
     # ---------------------------------------------------------------- metrics
     def stats(self) -> dict:
-        """On-disk footprint: delta frames vs keyframes (the compression win)."""
+        """On-disk footprint: delta frames vs keyframes (the compression win).
+        Flushes first, so the numbers cover every append."""
+        self.flush()
         key_b, delta_b, n_key, n_delta = 0, 0, 0, 0
         for e in self._index["timesteps"]:
             if e["kind"] == "key":
@@ -175,4 +304,7 @@ class TemporalCheckpointStore:
             "delta_compression": (
                 round((key_b / n_key) / (delta_b / n_delta), 2) if n_key and delta_b else None
             ),
+            "async_writes": self.async_writes,
+            "append_wall_s": round(self.append_s, 4),
+            "write_s": round(self.write_s, 4),
         }

@@ -324,11 +324,20 @@ class InsituTrainer:
 
     def run(self, stream, *, store=None) -> list[TimestepReport]:
         """Consume a ``VolumeStream``; optionally append each timestep's
-        params to a ``TemporalCheckpointStore``."""
+        params to a ``TemporalCheckpointStore``.
+
+        With the store's default asynchronous writer, ``append`` only pulls
+        params to host and enqueues the encode+write — delta quantization and
+        compression overlap with the *next* timestep's training instead of
+        stalling the stream. The store is flushed before returning, so every
+        appended timestep is durable when ``run`` hands back its reports.
+        """
         out = []
         for vol in stream:
             rep = self.start(vol) if self.state is None else self.advance(vol)
             out.append(rep)
             if store is not None:
                 store.append(rep.t_index, self.state.params)
+        if store is not None:
+            store.flush()
         return out

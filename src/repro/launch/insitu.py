@@ -31,11 +31,18 @@ from repro.serve_gs import front_camera
 from repro.volume.timevary import GENERATORS, synthetic_stream
 
 
-def scrub_smoke(store: TemporalCheckpointStore, cfg: GSConfig, *, n_scrub: int = 3) -> dict:
+def scrub_smoke(
+    store: TemporalCheckpointStore, cfg: GSConfig, *, n_scrub: int = 3, pipeline_depth: int = 2
+) -> dict:
     """Time-scrubbing smoke: one camera, ``n_scrub`` timesteps, frames must
-    be distinct per timestep and cache-hit on replay."""
+    be distinct per timestep and cache-hit on replay. Runs with
+    ``store_frames=False`` (the production serving configuration): frames
+    arrive through each request's ``FrameFuture``, nothing is pinned."""
     ts = store.timesteps()[:n_scrub]
-    server = build_timeline_server(store, cfg, n_levels=2, max_batch=2)
+    server = build_timeline_server(
+        store, cfg, n_levels=2, max_batch=2, store_frames=False,
+        pipeline_depth=pipeline_depth,
+    )
     cam = front_camera(server.pyramid, img_h=cfg.img_h, img_w=cfg.img_w)
 
     frames = scrub(server, cam, ts)
@@ -52,6 +59,7 @@ def scrub_smoke(store: TemporalCheckpointStore, cfg: GSConfig, *, n_scrub: int =
         "replay_identical": all(np.array_equal(frames[t], frames2[t]) for t in ts),
         "replay_cache_hits": server.cache.hits,
         "replay_new_misses": server.cache.misses - misses_first,
+        "pipeline": server.report()["pipeline"],
         "timeline": server.report()["timeline"],
     }
 
@@ -74,6 +82,14 @@ def main(argv=None):
     ap.add_argument("--raymarch-steps", type=int, default=48)
     ap.add_argument("--data-par", type=int, default=1)
     ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument(
+        "--pipeline-depth", type=int, default=2,
+        help="serving smoke: in-flight micro-batches (1 = synchronous dispatch)",
+    )
+    ap.add_argument(
+        "--sync-store", action="store_true",
+        help="write temporal checkpoints inline instead of on the background writer",
+    )
     ap.add_argument("--ckpt", default=None, help="temporal store dir (default: temp dir)")
     ap.add_argument("--no-scrub", action="store_true", help="skip the serving smoke")
     ap.add_argument("--report", default=None, help="write the JSON report here too")
@@ -98,7 +114,10 @@ def main(argv=None):
     )
     stream = synthetic_stream(args.dataset, args.timesteps, res=args.volume_res, t1=args.t1)
     store_dir = args.ckpt or os.path.join(tempfile.mkdtemp(prefix="insitu_"), "seq")
-    store = TemporalCheckpointStore(store_dir, keyframe_interval=args.keyframe_interval)
+    store = TemporalCheckpointStore(
+        store_dir, keyframe_interval=args.keyframe_interval,
+        async_writes=not args.sync_store,
+    )
     if store.timesteps():
         raise SystemExit(
             f"temporal store {store_dir} already holds timesteps {store.timesteps()}; "
@@ -132,7 +151,10 @@ def main(argv=None):
         "store": store.stats(),
     }
     if not args.no_scrub:
-        out["scrub"] = scrub_smoke(store, cfg, n_scrub=min(3, args.timesteps))
+        out["scrub"] = scrub_smoke(
+            store, cfg, n_scrub=min(3, args.timesteps), pipeline_depth=args.pipeline_depth
+        )
+    store.close()
 
     txt = json.dumps(out, indent=1)
     print(txt)

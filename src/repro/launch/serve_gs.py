@@ -61,6 +61,10 @@ def main(argv=None):
     ap.add_argument("--orbit-views", type=int, default=12)
     ap.add_argument("--radius-spread", type=float, default=1.0)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument(
+        "--pipeline-depth", type=int, default=2,
+        help="in-flight micro-batches kept on-device (1 = synchronous dispatch)",
+    )
     ap.add_argument("--cache", type=int, default=512, help="frame cache capacity")
     ap.add_argument("--rate", type=float, default=0.0, help="request rounds per second (0 = flat out)")
     ap.add_argument("--report", default=None, help="write the JSON report here too")
@@ -87,6 +91,7 @@ def main(argv=None):
         max_batch=args.max_batch,
         cache_capacity=args.cache,
         store_frames=False,
+        pipeline_depth=args.pipeline_depth,
     )
     print(
         f"serve_gs: {args.dataset} n={params.n} levels={server.pyramid.live_counts} "
@@ -107,6 +112,7 @@ def main(argv=None):
         "levels": args.levels,
         "keep_ratio": args.keep_ratio,
         "max_batch": args.max_batch,
+        "pipeline_depth": args.pipeline_depth,
     }
     out = json.dumps(report, indent=1)
     print(out)
@@ -114,9 +120,13 @@ def main(argv=None):
         os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
         with open(args.report, "w") as f:
             f.write(out)
-    assert report["completed"] == args.clients * args.requests
+    assert report["completed"] == args.clients * args.requests, (
+        f"pipelined path dropped requests: completed {report['completed']} of "
+        f"{args.clients * args.requests}"
+    )
     print(f"served {report['completed']} requests "
-          f"({report['frames_per_s']} frames/s, cache hit rate {report['cache']['hit_rate']})")
+          f"({report['frames_per_s']} frames/s, cache hit rate {report['cache']['hit_rate']}, "
+          f"depth {report['pipeline']['depth']}, deduped {report['pipeline']['deduped']})")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 """Batched, LOD-aware render serving for trained Gaussian models.
 
 The inference-side counterpart of the distributed trainer in
-``repro.core.train``: queue -> LOD select -> cache -> one vmap-ed jitted
-render per micro-batch. See ``repro.launch.serve_gs`` for the CLI driver and
-``benchmarks/serve_throughput.py`` for the throughput methodology.
+``repro.core.train``: queue -> LOD select -> in-flight dedup -> cache -> a
+pipelined ring of vmap-ed jitted renders (``submit`` returns a
+``FrameFuture``; up to ``pipeline_depth`` micro-batches stay on-device while
+the host postprocesses and assembles). See ``repro.launch.serve_gs`` for the
+CLI driver and ``benchmarks/serve_throughput.py`` for the throughput
+methodology.
 """
 from repro.serve_gs.batcher import MicroBatch, MicroBatcher, RenderRequest, stack_cameras
 from repro.serve_gs.cache import FrameCache, frame_key, quantize_camera
@@ -16,10 +19,11 @@ from repro.serve_gs.lod import (
     screen_coverage,
     select_level,
 )
-from repro.serve_gs.server import RenderServer, TimestepModels
+from repro.serve_gs.server import FrameFuture, RenderServer, TimestepModels
 
 __all__ = [
     "FrameCache",
+    "FrameFuture",
     "TimestepModels",
     "LODPyramid",
     "MicroBatch",

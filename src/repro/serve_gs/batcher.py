@@ -30,6 +30,7 @@ class RenderRequest:
     client_id: int = -1
     cache_key: tuple | None = None
     timestep: int = 0                    # timeline position (time-scrubbing)
+    future: object | None = None         # FrameFuture delivering this frame
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
 

@@ -6,6 +6,15 @@ never collide, so keys quantize the extrinsics/intrinsics: poses within the
 quantum render identically for all practical purposes and share one entry.
 The cache also keys on the LOD level — the same pose at a different level is
 a different frame.
+
+**Copy-on-write contract.** One frame buffer is shared by the cache, the
+server's retirement buffer, and every (possibly deduped) waiter's
+``FrameFuture`` — a second copy per reader would double serving memory for
+nothing. ``put`` therefore marks the array read-only
+(``arr.setflags(write=False)``) and ``get`` hands the same read-only array to
+every hit: a client that wants to draw on its frame must ``.copy()`` it
+first, and an accidental in-place mutation raises instead of silently
+corrupting every other reader and all later cache hits.
 """
 from __future__ import annotations
 
@@ -76,8 +85,12 @@ class FrameCache:
         return frame
 
     def put(self, key: tuple, frame: np.ndarray) -> None:
+        """Insert a frame. The cache owns the buffer from here on: it is
+        marked read-only (see the module docstring's copy-on-write contract),
+        so callers must not hold a writable alias."""
         if self.capacity == 0:
             return
+        frame.setflags(write=False)
         if key in self._store:
             self._store.move_to_end(key)
         self._store[key] = frame

@@ -52,6 +52,7 @@ def make_clients(
     base_radius: float = 3.0,
     radius_spread: float = 0.0,
     shared_orbit: bool = True,
+    dup_pairs: bool = False,
 ) -> list[OrbitClient]:
     """Build a deterministic client fleet.
 
@@ -59,13 +60,19 @@ def make_clients(
     later clients hit frames cached by earlier ones; ``radius_spread`` > 0
     pushes client *pairs* outward (radius grows per pair, so each radius ring
     still has two phase-shifted clients whose poses overlap and hit the
-    cache) to exercise coarser LOD levels.
+    cache) to exercise coarser LOD levels. ``dup_pairs`` makes client 2k+1 an
+    exact clone of client 2k (same orbit, same phase), so every request round
+    submits each pose twice *in the same wavefront* — the duplicate-heavy
+    trace that exercises the server's in-flight dedup (the cache cannot catch
+    these: the first render has not landed when the twin submits).
     """
     clients = []
     for c in range(n_clients):
-        radius = base_radius * (1.0 + radius_spread) ** (c // 2)
-        if shared_orbit:
-            phase = (c * 3) % n_views
+        # dup_pairs: both members of a pair take the pair's identity
+        ident = c // 2 if dup_pairs else c
+        radius = base_radius * (1.0 + radius_spread) ** (ident // 2)
+        if shared_orbit or dup_pairs:
+            phase = (ident * 3) % n_views
         else:
             # private trajectories: spread starting phases AND nudge each
             # radius past the pose quantum so no two clients ever share a

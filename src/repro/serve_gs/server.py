@@ -1,10 +1,27 @@
-"""The render server: queue -> LOD select -> cache -> batched jitted render.
+"""The render server: queue -> LOD select -> dedup -> pipelined batched render.
 
 Turns trained ``GaussianModel``s into a service. Requests are admitted via
-``submit`` (cache hits complete immediately); ``step`` drains one micro-batch
-through the vmap-ed distributed render; ``run`` drains everything pending.
-All orchestration is host-side Python — the device only ever sees fixed-shape
-(level, bucket) batched render calls, so steady-state serving never recompiles.
+``submit``, which returns a :class:`FrameFuture` (cache hits come back already
+resolved); ``step`` advances the dispatch pipeline by one unit; ``run`` drains
+everything pending. All orchestration is host-side Python — the device only
+ever sees fixed-shape (level, bucket) batched render calls, so steady-state
+serving never recompiles.
+
+**Pipelined dispatch.** The serve loop is a bounded in-flight ring of depth
+``pipeline_depth`` (default 2). ``step`` first *dispatches* micro-batches —
+the jitted render call returns immediately under jax's asynchronous dispatch,
+leaving the batch executing on-device — until the ring is full, then *retires*
+the oldest in-flight batch: block on its device buffers, copy frames out, fill
+the cache, resolve futures. While the device renders batch N the host is
+therefore postprocessing batch N-1 and assembling batch N+1; the host only
+blocks when the ring is full or a future is awaited. ``pipeline_depth=1`` is
+the old synchronous dispatch-then-block loop, preserved bit-for-bit.
+
+**In-flight dedup.** A pending-key table maps each in-flight ``frame_key`` to
+its future: submitting a pose that quantizes onto an in-flight render attaches
+the new request to the existing future instead of rendering twice (the
+cross-request dedup the cache alone cannot provide — the first render has not
+landed yet, so the cache misses).
 
 The server holds a *timeline*: timestep -> (LOD pyramid, device params).
 Static scenes are the one-entry special case (timestep 0, the default).
@@ -17,6 +34,7 @@ trace per (level, bucket) for every timestep.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import NamedTuple
@@ -44,6 +62,63 @@ def _percentile(xs: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
 
 
+class FrameFuture:
+    """Host-side handle for one (possibly still in-flight) frame.
+
+    Every ``submit`` returns one; requests whose ``frame_key`` matches an
+    in-flight render share a single future (in-flight dedup), so ``requests``
+    may hold several waiters. ``result()`` drives the server's pipeline until
+    the frame lands; the returned array is **read-only** (it is shared with
+    the cache and every deduped waiter) — ``.copy()`` it to mutate.
+    """
+
+    __slots__ = ("key", "requests", "_frame", "_server")
+
+    def __init__(self, server: "RenderServer", key: tuple, req: RenderRequest):
+        self.key = key
+        self.requests: list[RenderRequest] = [req]
+        self._frame: np.ndarray | None = None
+        self._server = server
+
+    @property
+    def request_id(self) -> int:
+        """Id of the primary (first-submitted) request."""
+        return self.requests[0].request_id
+
+    def done(self) -> bool:
+        return self._frame is not None
+
+    def result(self) -> np.ndarray:
+        """The frame, blocking (and driving the pipeline) until it lands."""
+        while self._frame is None:
+            if not self._server._advance():
+                raise RuntimeError(
+                    f"FrameFuture {self.key} cannot resolve: server pipeline is idle"
+                )
+        return self._frame
+
+    # -------------------------------------------------------------- internal
+    def _attach(self, req: RenderRequest) -> None:
+        assert self._frame is None, "cannot attach to a resolved future"
+        self.requests.append(req)
+
+    def _resolve(self, frame: np.ndarray) -> int:
+        """Deliver ``frame`` to every attached request; returns the count."""
+        self._frame = frame
+        for req in self.requests:
+            self._server._complete(req, frame)
+        return len(self.requests)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-not-retired micro-batch in the pipeline ring."""
+
+    mb: MicroBatch
+    imgs: jax.Array          # device buffers; not blocked on until retire
+    t_dispatch: float
+
+
 class TimestepModels(NamedTuple):
     """One timeline entry: the pyramid and its device-resident levels."""
 
@@ -52,7 +127,7 @@ class TimestepModels(NamedTuple):
 
 
 class RenderServer:
-    """Batched, LOD-aware, cached render service over a model timeline."""
+    """Batched, LOD-aware, cached, pipelined render service over a timeline."""
 
     def __init__(
         self,
@@ -67,12 +142,17 @@ class RenderServer:
         cache_capacity: int = 512,
         pose_quantum: float = 1e-3,
         store_frames: bool = True,
+        frames_capacity: int = 256,
+        pipeline_depth: int = 2,
         timestep: int = 0,
     ):
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else jax.make_mesh((1, 1), ("data", "model"))
         self.pose_quantum = pose_quantum
         self.store_frames = store_frames
+        self.frames_capacity = max(int(frames_capacity), 1)
+        assert pipeline_depth >= 1, pipeline_depth
+        self.pipeline_depth = int(pipeline_depth)
         self.n_levels = n_levels
         self.keep_ratio = keep_ratio
 
@@ -109,15 +189,26 @@ class RenderServer:
 
         self.batcher = MicroBatcher(max_batch=max_batch, buckets=buckets)
         self.cache = FrameCache(cache_capacity)
-        self.frames: dict[int, np.ndarray] = {}
+        # bounded retirement buffer of recently served frames (request_id ->
+        # frame); a sustained-load server must not pin every frame ever served
+        self.frames: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
+
+        # ---- pipeline state
+        self._ring: collections.deque[_InFlight] = collections.deque()
+        self._pending: dict[tuple, FrameFuture] = {}  # in-flight key -> future
+        self.deduped = 0
 
         # ---- metrics
         self._latencies: list[float] = []
         self._render_s = 0.0
+        self._busy_until = 0.0  # end of the last retired in-flight window
+        self._dispatch_s = 0.0
+        self._block_s = 0.0
         self._render_calls = 0
         self._level_requests = [0] * n_levels
         self._timestep_requests: dict[int, int] = {}
         self._batch_sizes: list[int] = []
+        self._occupancy: list[int] = []  # ring depth observed at each dispatch
         self._t_first: float | None = None
         self._t_last: float | None = None
         self.completed = 0
@@ -132,6 +223,20 @@ class RenderServer:
     def _level_params(self) -> tuple[G.GaussianModel, ...]:
         return self._timeline[self._first_timestep].level_params
 
+    @property
+    def n_traces(self) -> int:
+        """Total jit traces across the per-level render fns (the serving
+        recompile counter: steady-state serving must never grow this)."""
+        try:
+            return sum(int(f._cache_size()) for f in self._level_render)
+        except Exception:  # pragma: no cover - cache introspection API drift
+            return -1
+
+    @property
+    def in_flight(self) -> int:
+        """Dispatched-but-not-retired micro-batches currently on the ring."""
+        return len(self._ring)
+
     # --------------------------------------------------------------- timeline
     def add_timestep(self, timestep: int, params: G.GaussianModel) -> TimestepModels:
         """Register a model for one timeline position. Re-registering an
@@ -140,6 +245,9 @@ class RenderServer:
         """
         cache = getattr(self, "cache", None)  # absent during __init__'s first entry
         if cache is not None and int(timestep) in self._timeline:
+            # retire anything in flight first: an old-model batch must not
+            # land in the cache after its frames were invalidated
+            self.flush()
             cache.drop(lambda k: k[0] == int(timestep))
         pyramid = build_lod_pyramid(
             params,
@@ -192,11 +300,13 @@ class RenderServer:
         timestep: int = 0,
         client_id: int = -1,
         t_submit: float | None = None,
-    ) -> int:
-        """Admit one camera request against one timeline position.
+    ) -> FrameFuture:
+        """Admit one camera request; returns its :class:`FrameFuture`.
 
-        Cache hits complete synchronously (the frame is already on the host);
-        misses are queued for the next micro-batch.
+        Cache hits resolve immediately (the frame is already on the host);
+        requests matching an *in-flight* key attach to the existing future
+        (one render serves every concurrent duplicate); everything else is
+        queued for the next micro-batch.
         """
         t = time.perf_counter() if t_submit is None else t_submit
         if self._t_first is None:
@@ -213,38 +323,113 @@ class RenderServer:
 
         frame = self.cache.get(key)
         if frame is not None:
-            self._complete(req, frame)
-            return req.request_id
+            fut = FrameFuture(self, key, req)
+            fut._resolve(frame)
+            return fut
+        fut = self._pending.get(key)
+        if fut is not None:  # identical pose already in flight: render once
+            fut._attach(req)
+            self.deduped += 1
+            return fut
+        fut = FrameFuture(self, key, req)
+        req.future = fut
+        self._pending[key] = fut
         self.batcher.submit(req)
-        return req.request_id
+        return fut
 
     # ------------------------------------------------------------------ serve
-    def step(self) -> int:
-        """Render one micro-batch; returns the number of requests completed."""
+    def _dispatch_one(self) -> bool:
+        """Launch the next micro-batch without blocking on its result."""
         mb: MicroBatch | None = self.batcher.next_batch()
         if mb is None:
-            return 0
+            return False
         entry = self._entry(mb.timestep)
         t0 = time.perf_counter()
         imgs = self._level_render[mb.level](
             entry.level_params[mb.level], jax.tree_util.tree_map(np.asarray, mb.cams)
         )
-        imgs = np.asarray(jax.block_until_ready(imgs))
-        self._render_s += time.perf_counter() - t0
+        self._dispatch_s += time.perf_counter() - t0
         self._render_calls += 1
         self._batch_sizes.append(len(mb.requests))
-        for i, req in enumerate(mb.requests):
+        self._ring.append(_InFlight(mb, imgs, t0))
+        self._occupancy.append(len(self._ring))
+        return True
+
+    def _retire_one(self) -> int:
+        """Block on the oldest in-flight batch and deliver its frames."""
+        inf = self._ring.popleft()
+        t0 = time.perf_counter()
+        imgs = np.asarray(jax.block_until_ready(inf.imgs))
+        now = time.perf_counter()
+        self._block_s += now - t0
+        # render.total_s is the UNION of in-flight windows (device-busy wall):
+        # overlapping batches must not double-count, or depth>=2 would report
+        # more render seconds than wall-clock and look slower per frame
+        self._render_s += now - max(inf.t_dispatch, self._busy_until)
+        self._busy_until = now
+        done = 0
+        for i, req in enumerate(inf.mb.requests):
             frame = imgs[i].copy()  # own buffer: never pin the whole batch
+            frame.setflags(write=False)  # shared with cache + deduped waiters
             self.cache.put(req.cache_key, frame)
-            self._complete(req, frame)
-        return len(mb.requests)
+            fut = self._pending.pop(req.cache_key, None)
+            if fut is not None:
+                done += fut._resolve(frame)
+            else:  # pragma: no cover - defensive: request outside the table
+                self._complete(req, frame)
+                done += 1
+        return done
+
+    def step(self) -> int:
+        """Advance the pipeline one unit; returns requests completed.
+
+        Fills the in-flight ring up to ``pipeline_depth`` dispatches, then
+        retires the oldest batch. At depth 1 this is exactly the synchronous
+        submit->render->block loop this server used to run.
+        """
+        while len(self._ring) < self.pipeline_depth and self._dispatch_one():
+            pass
+        if self._ring:
+            return self._retire_one()
+        return 0
+
+    def flush(self) -> int:
+        """Retire every in-flight batch (no new dispatches); returns count."""
+        done = 0
+        while self._ring:
+            done += self._retire_one()
+        return done
 
     def run(self) -> int:
-        """Drain the queue; returns total requests completed by this call."""
+        """Drain the queue and the ring; returns requests completed."""
         done = 0
-        while self.batcher.pending:
+        while self.batcher.pending or self._ring:
             done += self.step()
         return done
+
+    def _advance(self) -> bool:
+        """One pipeline unit on behalf of an awaited future; False if idle."""
+        if self.batcher.pending or self._ring:
+            self.step()
+            return True
+        return False
+
+    def reset_metrics(self) -> None:
+        """Zero the serving counters (e.g. after warmup laps, before a
+        measured benchmark window). Leaves the cache contents, the timeline,
+        and the jit traces untouched; requires an idle pipeline."""
+        assert not self._ring and not self.batcher.pending, "pipeline not idle"
+        self._latencies.clear()
+        self._render_s = self._dispatch_s = self._block_s = 0.0
+        self._busy_until = 0.0
+        self._render_calls = 0
+        self._level_requests = [0] * self.n_levels
+        self._timestep_requests = {}
+        self._batch_sizes.clear()
+        self._occupancy.clear()
+        self._t_first = self._t_last = None
+        self.completed = 0
+        self.deduped = 0
 
     def _complete(self, req: RenderRequest, frame: np.ndarray) -> None:
         now = time.perf_counter()
@@ -253,6 +438,8 @@ class RenderServer:
         self.completed += 1
         if self.store_frames:
             self.frames[req.request_id] = frame
+            while len(self.frames) > self.frames_capacity:
+                self.frames.popitem(last=False)  # retire the oldest frame
 
     # ---------------------------------------------------------------- metrics
     def report(self) -> dict:
@@ -271,6 +458,18 @@ class RenderServer:
                 "calls": self._render_calls,
                 "total_s": round(self._render_s, 4),
                 "mean_batch": round(float(np.mean(self._batch_sizes)), 2) if self._batch_sizes else 0.0,
+            },
+            "pipeline": {
+                "depth": self.pipeline_depth,
+                "deduped": self.deduped,
+                "in_flight_now": len(self._ring),
+                "max_in_flight": max(self._occupancy) if self._occupancy else 0,
+                "mean_in_flight": (
+                    round(float(np.mean(self._occupancy)), 3) if self._occupancy else 0.0
+                ),
+                "dispatch_s": round(self._dispatch_s, 4),
+                "block_s": round(self._block_s, 4),
+                "n_traces": self.n_traces,
             },
             "cache": self.cache.stats(),
             "lod": {

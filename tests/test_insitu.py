@@ -135,6 +135,7 @@ def test_temporal_store_survives_reopen(tmp_path):
     store = TemporalCheckpointStore(d, keyframe_interval=3)
     store.append(0, g)
     store.append(1, g._replace(means=g.means + 0.01))
+    store.close()  # async writer: make the sequence durable before reopening
 
     reopened = TemporalCheckpointStore(d, keyframe_interval=7)
     assert reopened.keyframe_interval == 3  # the on-disk sequence owns its cadence
@@ -179,13 +180,10 @@ def test_add_timestep_replacement_invalidates_cached_frames():
     cfg = GSConfig(img_h=H, img_w=W, k_per_tile=64)
     server = RenderServer(_random_params(128, seed=9), cfg, n_levels=1, max_batch=2, cache_capacity=64)
     cam = make_cam(H, W)
-    rid1 = server.submit(cam)
-    server.run()
-    old_frame = server.frames[rid1]
+    old_frame = server.submit(cam).result()
     server.add_timestep(0, _random_params(128, seed=9, shift=0.5))  # replace the model
-    rid2 = server.submit(cam)  # must MISS the cache and re-render
-    server.run()
-    assert np.abs(server.frames[rid2] - old_frame).max() > 1e-4
+    fut2 = server.submit(cam)  # must MISS the cache and re-render
+    assert np.abs(fut2.result() - old_frame).max() > 1e-4
     assert server.report()["render"]["calls"] == 2
 
 

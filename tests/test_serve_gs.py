@@ -161,20 +161,24 @@ def test_server_serves_and_caches(tmp_path):
     cfg = GSConfig(img_h=H, img_w=W, k_per_tile=64)
     server = RenderServer(g, cfg, n_levels=2, max_batch=4, cache_capacity=64)
     cams = orbit_cameras(4, img_h=H, img_w=W)
-    ids = [server.submit(camera_slice(cams, i)) for i in range(4)]
+    futs = [server.submit(camera_slice(cams, i)) for i in range(4)]
     assert server.run() == 4
+    assert all(f.done() for f in futs)
     # resubmitting the same poses is served from cache without new renders
     calls_before = server.report()["render"]["calls"]
-    ids2 = [server.submit(camera_slice(cams, i)) for i in range(4)]
+    futs2 = [server.submit(camera_slice(cams, i)) for i in range(4)]
+    assert all(f.done() for f in futs2)  # cache hits resolve at submit
     server.run()
     rep = server.report()
     assert rep["render"]["calls"] == calls_before
     assert rep["cache"]["hits"] == 4 and rep["completed"] == 8
-    for rid in ids + ids2:
-        frame = server.frames[rid]
+    for fut in futs + futs2:
+        frame = fut.result()
         assert frame.shape == (H, W, 3) and np.isfinite(frame).all()
+        # the retirement buffer also holds recently served frames by id
+        np.testing.assert_array_equal(server.frames[fut.request_id], frame)
     # identical pose -> identical cached frame
-    np.testing.assert_array_equal(server.frames[ids[0]], server.frames[ids2[0]])
+    np.testing.assert_array_equal(futs[0].result(), futs2[0].result())
 
 
 def test_checkpoint_roundtrip_feeds_server(tmp_path):
@@ -185,7 +189,7 @@ def test_checkpoint_roundtrip_feeds_server(tmp_path):
     for a, b in zip(params, state.params):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     server = RenderServer(params, GSConfig(img_h=H, img_w=W, k_per_tile=64), n_levels=2, max_batch=2)
-    rid = server.submit(make_cam(H, W))
-    server.run()
-    assert server.frames[rid].shape == (H, W, 3)
-    assert np.isfinite(server.frames[rid]).all()
+    fut = server.submit(make_cam(H, W))
+    frame = fut.result()  # awaiting the future drives the pipeline itself
+    assert frame.shape == (H, W, 3)
+    assert np.isfinite(frame).all()

@@ -1,0 +1,260 @@
+"""Pipeline-discipline tests for the async serving engine: recompile budget,
+in-flight dedup, depth-invariance, future delivery, frame immutability, and
+the bounded retirement buffer."""
+import numpy as np
+import pytest
+
+from repro.core.config import GSConfig
+from repro.insitu import TemporalCheckpointStore, build_timeline_server, scrub
+from repro.serve_gs import RenderServer, make_clients, run_load
+
+from conftest import make_cam, make_scene
+
+H = W = 32
+
+
+def _server(g=None, **kw):
+    g = g if g is not None else make_scene(n=256, scale=0.06)
+    cfg = GSConfig(img_h=H, img_w=W, k_per_tile=64)
+    kw.setdefault("n_levels", 1)
+    kw.setdefault("max_batch", 4)
+    return RenderServer(g, cfg, **kw)
+
+
+# ---------------------------------------------------------------- recompiles
+def test_pipelined_run_never_retraces_past_warmup():
+    """A depth-2 pipelined run over warmed (level, bucket) shapes must keep
+    the jit trace count exactly at the warmup count: pipelining changes
+    dispatch order, never shapes."""
+    server = _server(pipeline_depth=2, cache_capacity=0)
+    server.warmup()  # every (level, bucket) variant
+    warmed = server.n_traces
+    assert warmed == len(server.batcher.buckets)  # one level, all buckets
+
+    clients = make_clients(3, n_views=8, img_h=H, img_w=W)
+    run_load(server, clients, requests_per_client=4)
+    assert server.completed == 12
+    assert server.n_traces == warmed  # steady-state serving never retraces
+
+
+# --------------------------------------------------------------------- dedup
+def test_in_flight_dedup_renders_once():
+    """N concurrent submits of one quantized pose -> exactly 1 render call;
+    every waiter gets the same frame through its own future."""
+    server = _server(pipeline_depth=2, cache_capacity=0)  # cache OFF: dedup
+    cam = make_cam(H, W)                                  # is the pending table
+    futs = [server.submit(cam, client_id=c) for c in range(4)]
+    assert server.batcher.pending == 1  # one queued render for 4 requests
+    assert server.run() == 4
+    rep = server.report()
+    assert rep["render"]["calls"] == 1
+    assert rep["pipeline"]["deduped"] == 3
+    assert rep["completed"] == 4
+    frames = [f.result() for f in futs]
+    for fr in frames[1:]:
+        np.testing.assert_array_equal(frames[0], fr)
+
+
+def test_dedup_only_within_flight_window():
+    # after the first render retires, a cache-off resubmit renders again:
+    # the pending table holds only in-flight keys, not history
+    server = _server(cache_capacity=0)
+    cam = make_cam(H, W)
+    server.submit(cam)
+    server.run()
+    server.submit(cam)
+    server.run()
+    rep = server.report()
+    assert rep["render"]["calls"] == 2 and rep["pipeline"]["deduped"] == 0
+
+
+# ------------------------------------------------------------ depth invariance
+def test_depth1_and_depth2_serve_identical_frames():
+    """The same request trace through the sync loop (depth=1) and the
+    pipelined ring (depth=2) produces bitwise-identical frames."""
+    g = make_scene(n=256, scale=0.06)
+    results = {}
+    for depth in (1, 2):
+        server = _server(g, pipeline_depth=depth, cache_capacity=64)
+        clients = make_clients(3, n_views=8, img_h=H, img_w=W)
+        futs = []
+        for _ in range(4):
+            for cl in clients:
+                futs.append(server.submit(cl.next_camera(), client_id=cl.client_id))
+            server.run()
+        results[depth] = [f.result() for f in futs]
+        assert server.completed == 12
+    for a, b in zip(results[1], results[2]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ring_keeps_at_most_depth_in_flight():
+    server = _server(pipeline_depth=2, max_batch=1, cache_capacity=0)
+    clients = make_clients(1, n_views=16, img_h=H, img_w=W)
+    for _ in range(6):
+        server.submit(clients[0].next_camera())
+    server.run()
+    rep = server.report()
+    assert rep["pipeline"]["max_in_flight"] == 2  # ring bounded by depth
+    assert rep["pipeline"]["in_flight_now"] == 0  # run() drains fully
+    assert rep["render"]["calls"] == 6
+
+
+# ----------------------------------------------------------- future delivery
+def test_future_result_drives_pipeline_without_run():
+    server = _server(pipeline_depth=2)
+    futs = [server.submit(make_cam(H, W, dist=2.0 + 0.2 * i)) for i in range(3)]
+    # no explicit run()/step(): awaiting the last future drains everything
+    frame = futs[-1].result()
+    assert frame.shape == (H, W, 3)
+    assert all(f.done() for f in futs)
+
+
+def test_future_on_idle_pipeline_raises():
+    server = _server()
+    fut = server.submit(make_cam(H, W))
+    server.run()
+    assert fut.result() is not None  # resolved; result() is now a plain read
+    # a hand-built unresolvable future fails loudly instead of spinning
+    from repro.serve_gs.server import FrameFuture
+
+    orphan = FrameFuture(server, ("nope",), fut.requests[0])
+    with pytest.raises(RuntimeError, match="idle"):
+        orphan.result()
+
+
+# ----------------------------------------------- frame immutability (cache)
+def test_served_frames_are_read_only_and_cache_cannot_be_poisoned():
+    server = _server(cache_capacity=64)
+    cam = make_cam(H, W)
+    frame = server.submit(cam).result()
+    assert not frame.flags.writeable
+    with pytest.raises(ValueError):
+        frame[0, 0, 0] = 123.0  # in-place mutation raises, never corrupts
+
+    # the copy-on-write contract: a client edits a private copy...
+    scribbled = frame.copy()
+    scribbled[:] = 7.0
+    # ...and a later cache hit still returns the pristine frame
+    hit = server.submit(cam).result()
+    np.testing.assert_array_equal(hit, frame)
+    assert float(np.abs(hit).max()) != 7.0
+    assert server.report()["render"]["calls"] == 1  # second submit was a hit
+
+
+# ------------------------------------------------- bounded retirement buffer
+def test_frames_buffer_is_bounded_under_sustained_load():
+    server = _server(frames_capacity=5, cache_capacity=0)
+    clients = make_clients(1, n_views=32, img_h=H, img_w=W)
+    futs = [server.submit(clients[0].next_camera()) for _ in range(12)]
+    server.run()
+    assert server.completed == 12
+    assert len(server.frames) == 5  # old frames retired, no unbounded growth
+    # the newest frames are the ones retained
+    kept = set(server.frames)
+    assert kept == {f.request_id for f in futs[-5:]}
+
+
+def test_store_frames_false_keeps_buffer_empty():
+    server = _server(store_frames=False)
+    fut = server.submit(make_cam(H, W))
+    assert fut.result().shape == (H, W, 3)
+    assert len(server.frames) == 0
+
+
+# ------------------------------------- scrub on a store_frames=False server
+def test_scrub_works_with_store_frames_false(tmp_path):
+    """Regression: scrub used to read server.frames[rid] and KeyError on any
+    server built with store_frames=False (exactly what the CLI driver and the
+    throughput benchmark build). Futures deliver frames regardless."""
+    import jax.numpy as jnp
+
+    from repro.core import gaussians as G
+
+    rng = np.random.default_rng(3)
+    store = TemporalCheckpointStore(str(tmp_path / "seq"), keyframe_interval=2)
+    for t in range(3):
+        g = G.init_from_points(
+            jnp.asarray(rng.normal(0, 0.4, (128, 3)).astype(np.float32) + 0.1 * t),
+            jnp.asarray(np.full((128, 3), 0.5, np.float32)),
+            init_scale=0.06,
+        )
+        store.append(t, g)
+    cfg = GSConfig(img_h=H, img_w=W, k_per_tile=64)
+    server = build_timeline_server(
+        store, cfg, n_levels=2, max_batch=2, store_frames=False, pipeline_depth=2
+    )
+    frames = scrub(server, make_cam(H, W), [0, 1, 2])
+    assert set(frames) == {0, 1, 2}
+    for t in (0, 1):
+        assert np.abs(frames[t] - frames[t + 1]).max() > 1e-4
+    assert len(server.frames) == 0  # nothing pinned
+
+
+# ------------------------------------------------------- async store writer
+def test_async_and_sync_store_roundtrip_identically(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.core import gaussians as G
+
+    rng = np.random.default_rng(11)
+    base = G.init_from_points(
+        jnp.asarray(rng.normal(0, 0.4, (64, 3)).astype(np.float32)),
+        jnp.asarray(np.full((64, 3), 0.5, np.float32)),
+        init_scale=0.06,
+    )
+    frames = [base._replace(means=base.means + 0.01 * t) for t in range(4)]
+
+    stores = {
+        "async": TemporalCheckpointStore(str(tmp_path / "a"), keyframe_interval=2),
+        "sync": TemporalCheckpointStore(str(tmp_path / "s"), keyframe_interval=2, async_writes=False),
+    }
+    for st in stores.values():
+        for t, f in enumerate(frames):
+            st.append(t, f)
+        st.close()
+    assert stores["async"].timesteps() == stores["sync"].timesteps() == [0, 1, 2, 3]
+    for t in range(4):
+        a, s = stores["async"].load(t), stores["sync"].load(t)
+        for name in G.GaussianModel._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a, name)), np.asarray(getattr(s, name)))
+
+
+def test_store_writer_failure_names_timestep_and_recovers(tmp_path, monkeypatch):
+    """A failed background write surfaces (naming the lost timestep) on the
+    next flush; later appends still land — promoted to a keyframe when the
+    failure left no reconstruction base for a delta."""
+    import jax.numpy as jnp
+
+    from repro.core import gaussians as G
+
+    g = G.init_from_points(jnp.zeros((8, 3)), jnp.full((8, 3), 0.5))
+    store = TemporalCheckpointStore(str(tmp_path / "seq"), keyframe_interval=2)
+    real_write = store._write
+    monkeypatch.setattr(
+        store, "_write",
+        lambda t, host, is_key: (_ for _ in ()).throw(OSError("disk full"))
+        if t == 0 else real_write(t, host, is_key),
+    )
+    store.append(0, g)
+    with pytest.raises(RuntimeError, match="timestep 0"):
+        store.flush()
+    store.append(1, g._replace(means=g.means + 0.5))  # delta slot -> promoted
+    store.close()
+    assert store.timesteps() == [1]  # t=0 lost (reported), t=1 durable
+    assert store._index["timesteps"][0]["kind"] == "key"
+    np.testing.assert_allclose(np.asarray(store.load(1).means), 0.5, atol=1e-6)
+
+
+def test_store_append_after_close_rejected(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.core import gaussians as G
+
+    g = G.init_from_points(jnp.zeros((8, 3)), jnp.zeros((8, 3)))
+    store = TemporalCheckpointStore(str(tmp_path / "seq"))
+    store.append(0, g)
+    store.close()
+    store.close()  # idempotent
+    with pytest.raises(AssertionError):
+        store.append(1, g)
