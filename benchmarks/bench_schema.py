@@ -1,0 +1,31 @@
+"""Shared machine-readable benchmark record (BENCH_*.json).
+
+Every serving benchmark in CI emits one flat record with the same shape, so
+the per-PR perf trajectory can be diffed/plotted without per-benchmark
+parsers:
+
+  {
+    "bench":   "<benchmark name>",
+    "schema":  1,
+    "config":  {...knobs that define the run...},
+    "metrics": {...flat floats/ints: frames_per_s, p50_ms, p99_ms, ...}
+  }
+"""
+from __future__ import annotations
+
+import json
+import os
+
+SCHEMA_VERSION = 1
+
+
+def bench_record(name: str, config: dict, metrics: dict) -> dict:
+    return {"bench": name, "schema": SCHEMA_VERSION, "config": config, "metrics": metrics}
+
+
+def write_bench(path: str, name: str, config: dict, metrics: dict) -> dict:
+    rec = bench_record(name, config, metrics)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec

@@ -103,110 +103,111 @@ def main(argv=None):
     vols = list(synthetic_stream(args.dataset, args.timesteps, res=args.volume_res, t1=args.t1))
 
     # ---- warm pipeline over the whole stream, with temporal checkpoints
-    store = TemporalCheckpointStore(
+    # (context manager: queued background writes are flushed + the writer
+    # joined even if a later benchmark phase raises)
+    with TemporalCheckpointStore(
         os.path.join(tempfile.mkdtemp(prefix="insitu_bench_"), "seq"),
         keyframe_interval=args.keyframe_interval,
-    )
-    warm = make_trainer(cfg, mesh, args, eval_every=args.eval_every)
-    warm_reports = warm.run(iter(vols), store=store)
+    ) as store:
+        warm = make_trainer(cfg, mesh, args, eval_every=args.eval_every)
+        warm_reports = warm.run(iter(vols), store=store)
 
-    # ---- cold baselines: from-scratch at each later timestep, same capacity
-    rows = [{
-        "t": 0,
-        "mode": "cold_start",
-        "steps": warm_reports[0].steps,
-        "psnr_after": round(warm_reports[0].psnr_after, 3),
-        "train_s": round(warm_reports[0].train_s, 3),
-        "wall_s": round(warm_reports[0].wall_s, 3),
-    }]
-    fewer = []
-    cold = make_trainer(cfg, mesh, args, capacity=warm.capacity, eval_every=args.eval_every)
-    for t in range(1, args.timesteps):
-        if cold.state is not None:
-            cold.reset()  # keep the jitted fns: no retrace per baseline
-        cold_rep = cold.start(vols[t])
-        target = cold_rep.psnr_after - args.target_tol_db
-        w_rep = warm_reports[t]
-        w_steps = steps_to_target(w_rep.psnr_curve, target)
-        c_steps = steps_to_target(cold_rep.psnr_curve, target)
-        fewer.append(w_steps is not None and c_steps is not None and w_steps < c_steps)
-        rows.append({
-            "t": t,
-            "target_psnr": round(target, 3),
-            "warm": {
-                "steps_to_target": w_steps,
-                "psnr_before": round(w_rep.psnr_before, 3),
-                "psnr_after": round(w_rep.psnr_after, 3),
-                "n_reseeded": w_rep.n_reseeded,
-                "train_s": round(w_rep.train_s, 3),
-                "wall_s": round(w_rep.wall_s, 3),
-                "curve": [(s, round(p, 3)) for s, p in w_rep.psnr_curve],
+        # ---- cold baselines: from-scratch at each later timestep, same capacity
+        rows = [{
+            "t": 0,
+            "mode": "cold_start",
+            "steps": warm_reports[0].steps,
+            "psnr_after": round(warm_reports[0].psnr_after, 3),
+            "train_s": round(warm_reports[0].train_s, 3),
+            "wall_s": round(warm_reports[0].wall_s, 3),
+        }]
+        fewer = []
+        cold = make_trainer(cfg, mesh, args, capacity=warm.capacity, eval_every=args.eval_every)
+        for t in range(1, args.timesteps):
+            if cold.state is not None:
+                cold.reset()  # keep the jitted fns: no retrace per baseline
+            cold_rep = cold.start(vols[t])
+            target = cold_rep.psnr_after - args.target_tol_db
+            w_rep = warm_reports[t]
+            w_steps = steps_to_target(w_rep.psnr_curve, target)
+            c_steps = steps_to_target(cold_rep.psnr_curve, target)
+            fewer.append(w_steps is not None and c_steps is not None and w_steps < c_steps)
+            rows.append({
+                "t": t,
+                "target_psnr": round(target, 3),
+                "warm": {
+                    "steps_to_target": w_steps,
+                    "psnr_before": round(w_rep.psnr_before, 3),
+                    "psnr_after": round(w_rep.psnr_after, 3),
+                    "n_reseeded": w_rep.n_reseeded,
+                    "train_s": round(w_rep.train_s, 3),
+                    "wall_s": round(w_rep.wall_s, 3),
+                    "curve": [(s, round(p, 3)) for s, p in w_rep.psnr_curve],
+                },
+                "cold": {
+                    "steps_to_target": c_steps,
+                    "psnr_after": round(cold_rep.psnr_after, 3),
+                    "train_s": round(cold_rep.train_s, 3),
+                    "curve": [(s, round(p, 3)) for s, p in cold_rep.psnr_curve],
+                },
+                "warm_fewer_steps": fewer[-1],
+            })
+
+        # ---- pipelined time-scrub serving over the stored sequence: every
+        # timestep requested at one camera through the FrameFuture path
+        # (store_frames off, depth-D dispatch); all submits must complete.
+        with build_timeline_server(
+            store, cfg, n_levels=2, max_batch=2, store_frames=False,
+            pipeline_depth=args.pipeline_depth,
+        ) as server:
+            cam = front_camera(server.pyramid, img_h=cfg.img_h, img_w=cfg.img_w)
+            scrub_ts = store.timesteps()
+            frames = scrub(server, cam, scrub_ts)
+            serve_rep = server.report()
+        if serve_rep["completed"] != len(scrub_ts):
+            raise SystemExit(
+                f"pipelined scrub dropped requests: completed {serve_rep['completed']} "
+                f"of {len(scrub_ts)}"
+            )
+
+        consec = 0
+        best_consec = 0
+        for f in fewer:
+            consec = consec + 1 if f else 0
+            best_consec = max(best_consec, consec)
+        report = {
+            "config": {
+                "dataset": args.dataset, "timesteps": args.timesteps,
+                "volume_res": args.volume_res, "res": args.res,
+                "capacity": warm.capacity, "cold_steps": args.cold_steps,
+                "eval_every": args.eval_every, "target_tol_db": args.target_tol_db,
             },
-            "cold": {
-                "steps_to_target": c_steps,
-                "psnr_after": round(cold_rep.psnr_after, 3),
-                "train_s": round(cold_rep.train_s, 3),
-                "curve": [(s, round(p, 3)) for s, p in cold_rep.psnr_curve],
+            "timesteps": rows,
+            "recompile_count": warm.n_traces,
+            "per_timestep_wall_s": [round(r.wall_s, 3) for r in warm_reports],
+            "warm_fewer_steps_consecutive": best_consec,
+            "store": store.stats(),
+            "scrub_serving": {
+                "timesteps": len(scrub_ts),
+                "completed": serve_rep["completed"],
+                "frames_per_s": serve_rep["frames_per_s"],
+                "pipeline": serve_rep["pipeline"],
+                "frame_shape": list(frames[scrub_ts[0]].shape),
             },
-            "warm_fewer_steps": fewer[-1],
-        })
-
-    # ---- pipelined time-scrub serving over the stored sequence: every
-    # timestep requested at one camera through the FrameFuture path
-    # (store_frames off, depth-D dispatch); all submits must complete.
-    server = build_timeline_server(
-        store, cfg, n_levels=2, max_batch=2, store_frames=False,
-        pipeline_depth=args.pipeline_depth,
-    )
-    cam = front_camera(server.pyramid, img_h=cfg.img_h, img_w=cfg.img_w)
-    scrub_ts = store.timesteps()
-    frames = scrub(server, cam, scrub_ts)
-    serve_rep = server.report()
-    if serve_rep["completed"] != len(scrub_ts):
-        raise SystemExit(
-            f"pipelined scrub dropped requests: completed {serve_rep['completed']} "
-            f"of {len(scrub_ts)}"
-        )
-
-    consec = 0
-    best_consec = 0
-    for f in fewer:
-        consec = consec + 1 if f else 0
-        best_consec = max(best_consec, consec)
-    report = {
-        "config": {
-            "dataset": args.dataset, "timesteps": args.timesteps,
-            "volume_res": args.volume_res, "res": args.res,
-            "capacity": warm.capacity, "cold_steps": args.cold_steps,
-            "eval_every": args.eval_every, "target_tol_db": args.target_tol_db,
-        },
-        "timesteps": rows,
-        "recompile_count": warm.n_traces,
-        "per_timestep_wall_s": [round(r.wall_s, 3) for r in warm_reports],
-        "warm_fewer_steps_consecutive": best_consec,
-        "store": store.stats(),
-        "scrub_serving": {
-            "timesteps": len(scrub_ts),
-            "completed": serve_rep["completed"],
-            "frames_per_s": serve_rep["frames_per_s"],
-            "pipeline": serve_rep["pipeline"],
-            "frame_shape": list(frames[scrub_ts[0]].shape),
-        },
-        "acceptance": {
-            "warm_fewer_on_2_consecutive": best_consec >= 2,
-            "single_train_step_trace": warm.n_traces == 1,
-            "scrub_served_all": serve_rep["completed"] == len(scrub_ts),
-        },
-    }
-    store.close()
-    out = json.dumps(report, indent=1)
-    print(out)
-    if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            f.write(out)
-    assert report["acceptance"]["single_train_step_trace"], report["recompile_count"]
-    assert report["acceptance"]["warm_fewer_on_2_consecutive"], fewer
+            "acceptance": {
+                "warm_fewer_on_2_consecutive": best_consec >= 2,
+                "single_train_step_trace": warm.n_traces == 1,
+                "scrub_served_all": serve_rep["completed"] == len(scrub_ts),
+            },
+        }
+        out = json.dumps(report, indent=1)
+        print(out)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                f.write(out)
+        assert report["acceptance"]["single_train_step_trace"], report["recompile_count"]
+        assert report["acceptance"]["warm_fewer_on_2_consecutive"], fewer
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
+from bench_schema import write_bench
 from repro.core.config import GSConfig
 from repro.launch.serve_gs import init_params_from_volume
 from repro.serve_gs import RenderServer, make_clients, run_load
@@ -109,6 +110,11 @@ def main(argv=None):
         help="in-flight depth for the pipelined scenario (sync baseline is 1)",
     )
     ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--bench-out", default=None,
+        help="also write a flat BENCH_*.json record (bench_schema) for the "
+        "cross-PR perf trajectory",
+    )
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -231,6 +237,27 @@ def main(argv=None):
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             f.write(out)
+    if args.bench_out:
+        write_bench(
+            args.bench_out, "serve_throughput",
+            config={
+                "clients": args.clients, "requests_per_client": args.requests,
+                "res": args.res, "gaussians": params.n, "devices": n_dev,
+                "max_batch": args.max_batch, "pipeline_depth": args.pipeline_depth,
+                "smoke": args.smoke,
+            },
+            metrics={
+                "frames_per_s": rep_pipe["frames_per_s"],
+                "p50_ms": rep_pipe["latency_ms"]["p50"],
+                "p99_ms": rep_pipe["latency_ms"]["p99"],
+                "sync_frames_per_s": rep_sync["frames_per_s"],
+                "pipeline_speedup": report["pipeline_speedup"],
+                "batched_speedup": report["batched_speedup"],
+                "serial_frames_per_s": rep_serial["frames_per_s"],
+                "cached_frames_per_s": rep_cached["frames_per_s"],
+                "deduped": report["deduped"],
+            },
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""Network frontend: asyncio gateway + multi-stream sessions over the
+pipelined serving engine.
+
+The delivery side of the paper's "real-time post hoc and in situ
+visualization": remote clients speak a small versioned binary protocol
+(``protocol``), an asyncio TCP gateway (``gateway``) admission-controls them
+into per-session bounded queues, and a session layer (``sessions``) maps
+string stream ids — static trained scenes and scrubbable insitu timelines —
+onto ONE shared ``RenderServer`` so every stream's traffic coalesces into
+the same micro-batches, cache, and jit traces. Frames travel as RGB8 or
+zlib-compressed temporal deltas (``encode``), encoded off the event loop.
+
+See ``repro.launch.frontend`` for the CLI and
+``benchmarks/frontend_load.py`` for the localhost load methodology.
+"""
+from repro.frontend.client import (
+    AsyncFrontendClient,
+    FrontendClient,
+    RemoteRenderError,
+    ShedError,
+)
+from repro.frontend.encode import FrameDecoder, FrameEncoder, quantize_rgb8
+from repro.frontend.gateway import Gateway, GatewayThread
+from repro.frontend.protocol import (
+    ProtocolError,
+    camera_from_wire,
+    camera_to_wire,
+    iter_messages,
+    pack_message,
+    read_message,
+    write_message,
+)
+from repro.frontend.sessions import (
+    PendingRender,
+    Session,
+    SessionManager,
+    StreamInfo,
+)
+
+__all__ = [
+    "AsyncFrontendClient",
+    "FrameDecoder",
+    "FrameEncoder",
+    "FrontendClient",
+    "Gateway",
+    "GatewayThread",
+    "PendingRender",
+    "ProtocolError",
+    "RemoteRenderError",
+    "Session",
+    "SessionManager",
+    "ShedError",
+    "StreamInfo",
+    "camera_from_wire",
+    "camera_to_wire",
+    "iter_messages",
+    "pack_message",
+    "quantize_rgb8",
+    "read_message",
+    "write_message",
+]

@@ -1,0 +1,118 @@
+"""Off-loop frame encoding: raw RGB8 and zlib-compressed temporal deltas.
+
+Rendered frames leave the serving engine as read-only float32 HxWx3 arrays in
+[0, 1]. Shipping those over TCP would cost 12 bytes/pixel; the gateway instead
+quantizes to RGB8 (4x smaller, visually lossless for display) and — because a
+viewer's consecutive frames are usually near-identical (orbit playback, time
+scrubbing at a fixed pose, cache hits) — optionally sends the *uint8
+difference vs the last frame it sent on that stream*, zlib-compressed. The
+difference wraps modulo 256, so decode is exact: ``cur = last + delta (mod
+256)`` reproduces the quantized frame bit-for-bit; a static view compresses
+to almost nothing.
+
+Encoder and decoder are tiny mirrored state machines keyed by stream id:
+both sides update ``last`` to the decoded frame after every ``frame``
+message, and TCP ordering keeps them in lockstep. The first frame on a
+stream (or any resolution change) is always a raw keyframe. All of this is
+pure host work — the gateway runs it on an executor thread, never on the
+event loop (that is the "off-loop" in the module name).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+RAW8 = "rgb8"       # payload = uint8 HxWx3, row-major
+ZDELTA8 = "zdelta8"  # payload = zlib(uint8 wraparound diff vs last frame)
+
+
+def quantize_rgb8(frame: np.ndarray) -> np.ndarray:
+    """Float [0,1] HxWx3 -> contiguous uint8 (the on-wire pixel format)."""
+    f = np.asarray(frame)
+    if f.dtype == np.uint8:
+        return np.ascontiguousarray(f)
+    return np.ascontiguousarray(
+        (np.clip(f, 0.0, 1.0) * 255.0 + 0.5).astype(np.uint8)
+    )
+
+
+class FrameEncoder:
+    """Per-connection encoder; independent delta chain per stream id."""
+
+    def __init__(self, *, delta: bool = True, zlevel: int = 1):
+        self.delta = delta
+        self.zlevel = zlevel
+        self._last: dict[str, np.ndarray] = {}
+        self.raw_frames = 0
+        self.delta_frames = 0
+        self.bytes_raw = 0      # what raw-only would have cost
+        self.bytes_sent = 0
+
+    def encode(self, stream: str, frame: np.ndarray) -> tuple[dict, bytes]:
+        """Returns (meta fields for the frame header, payload bytes)."""
+        q = quantize_rgb8(frame)
+        meta = {"shape": list(q.shape)}
+        last = self._last.get(stream)
+        if self.delta and last is not None and last.shape == q.shape:
+            diff = q - last  # uint8 arithmetic wraps mod 256: exact on decode
+            payload = zlib.compress(diff.tobytes(), self.zlevel)
+            meta["encoding"] = ZDELTA8
+            self.delta_frames += 1
+        else:
+            payload = q.tobytes()
+            meta["encoding"] = RAW8
+            self.raw_frames += 1
+        self._last[stream] = q
+        self.bytes_raw += q.nbytes
+        self.bytes_sent += len(payload)
+        return meta, payload
+
+    def reset(self, stream: str | None = None) -> None:
+        """Drop delta state (one stream, or all): next frame is a keyframe."""
+        if stream is None:
+            self._last.clear()
+        else:
+            self._last.pop(stream, None)
+
+    def stats(self) -> dict:
+        return {
+            "delta": self.delta,
+            "raw_frames": self.raw_frames,
+            "delta_frames": self.delta_frames,
+            "bytes_sent": self.bytes_sent,
+            "bytes_raw_equiv": self.bytes_raw,
+            "compression": round(self.bytes_raw / self.bytes_sent, 3)
+            if self.bytes_sent
+            else None,
+        }
+
+
+class FrameDecoder:
+    """Mirror of :class:`FrameEncoder`; lives in the client."""
+
+    def __init__(self):
+        self._last: dict[str, np.ndarray] = {}
+
+    def decode(self, stream: str, meta: dict, payload: bytes) -> np.ndarray:
+        """Returns the frame as a READ-ONLY uint8 array (the same contract
+        as the server's copy-on-write cache frames, and uniform across the
+        raw and delta paths — mutate a ``.copy()``)."""
+        shape = tuple(int(s) for s in meta["shape"])
+        enc = meta.get("encoding", RAW8)
+        if enc == RAW8:
+            # zero-copy view over the wire bytes (already non-writable)
+            q = np.frombuffer(payload, np.uint8).reshape(shape)
+        elif enc == ZDELTA8:
+            last = self._last.get(stream)
+            if last is None or last.shape != shape:
+                raise ValueError(
+                    f"delta frame for stream {stream!r} without a matching base"
+                )
+            diff = np.frombuffer(zlib.decompress(payload), np.uint8).reshape(shape)
+            q = last + diff  # wraps mod 256, inverting the encoder exactly
+            q.setflags(write=False)
+        else:
+            raise ValueError(f"unknown frame encoding {enc!r}")
+        self._last[stream] = q
+        return q

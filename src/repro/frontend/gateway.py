@@ -1,0 +1,547 @@
+"""Asyncio TCP gateway: the network door onto the serving engine.
+
+One event loop owns every connection; the blocking world (jax dispatch,
+``FrameFuture.result()``, zlib) never runs on it:
+
+  reader task (per conn)   parse messages, admission-control into the
+                           session's bounded queue, answer shed/bad requests
+  dispatcher task (one)    collect a *wave* — up to ``wave_per_session``
+                           queued requests from every live session, round-
+                           robin fair — and hand it to the render executor
+  render executor (1 thr)  the only thread that touches the RenderServer:
+                           submit the wave, drain the pipelined ring, return
+                           frames. Single-threaded by design — the serving
+                           engine is not thread-safe, and one thread is all
+                           it needs (the device does the parallel work)
+  encode executor (1 thr)  RGB8 quantization + zlib delta compression
+
+A wave is the network-side analogue of the micro-batcher's wavefront: every
+session contributes its oldest queued requests, so concurrent clients
+coalesce into large micro-batches and identical poses dedup in flight, while
+the per-session quota keeps one chatty client from monopolizing a wave.
+Responses are written frame-by-frame as the wave retires; each full message
+is composed before a single ``write`` call, so the reader task (shed errors)
+and the dispatcher (frames) can safely share one writer.
+"""
+from __future__ import annotations
+
+import asyncio
+import sys
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.frontend import protocol as proto
+from repro.frontend.sessions import PendingRender, Session, SessionManager
+
+# error codes
+SHED = "shed"                  # load-shedding dropped this queued request
+BAD_REQUEST = "bad_request"    # unknown stream/timestep or malformed fields
+RENDER_ERROR = "render_error"  # the serving engine failed this request
+
+
+class Gateway:
+    """One TCP endpoint multiplexing sessions onto a ``SessionManager``."""
+
+    def __init__(
+        self,
+        manager: SessionManager,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        queue_limit: int = 8,
+        wave_per_session: int = 4,
+        delta_encoding: bool = True,
+        coalesce_ms: float = 2.0,
+        inline_encode_bytes: int = 1 << 20,
+        gil_switch_interval_s: float | None = 5e-4,
+    ):
+        self.manager = manager
+        self.host = host
+        self.port = port  # 0 = ephemeral; the bound port replaces it on start
+        self.queue_limit = queue_limit
+        self.wave_per_session = wave_per_session
+        self.delta_encoding = delta_encoding
+        self.coalesce_ms = coalesce_ms
+        self.inline_encode_bytes = inline_encode_bytes
+        self.gil_switch_interval_s = gil_switch_interval_s
+        self._prev_switch_interval: float | None = None
+
+        self._server: asyncio.base_events.Server | None = None
+        self._dispatch_task: asyncio.Task | None = None
+        self._deliver_task: asyncio.Task | None = None  # tail of the chain
+        self._conn_tasks: set[asyncio.Task] = set()
+        self._sessions: dict[int, Session] = {}
+        self._writers: dict[int, asyncio.StreamWriter] = {}
+        self._render_exec = ThreadPoolExecutor(1, thread_name_prefix="gs-render")
+        self._encode_exec = ThreadPoolExecutor(1, thread_name_prefix="gs-encode")
+        self._work: asyncio.Event | None = None  # created on the serving loop
+        self._gate: asyncio.Event | None = None
+        self._closed = False
+
+        # wave-cycle phase accounting (loop thread only): where a served
+        # frame's wall-clock goes — render executor vs encode vs socket
+        self.render_wait_s = 0.0
+        self.encode_wait_s = 0.0
+        self.write_s = 0.0
+
+        # counters (loop thread only)
+        self.frames_sent = 0
+        self.shed_sent = 0
+        self.protocol_errors = 0
+        self.request_errors = 0
+        self.dropped_writes = 0
+        self.delivery_errors = 0
+        self.engine_errors = 0
+        self.bytes_out = 0
+        self.waves = 0
+        self.connections_total = 0
+
+    # -------------------------------------------------------------- lifecycle
+    async def start(self) -> "Gateway":
+        assert self.manager.server is not None, "register streams before start()"
+        if self.gil_switch_interval_s is not None:
+            # the serving hot path ping-pongs between the event loop, the
+            # render thread, and the encode thread; CPython's default 5 ms
+            # GIL switch interval turns every hand-off into milliseconds of
+            # wakeup latency (measured 2-3x aggregate fps on a 2-core host).
+            # Process-wide by nature; pass None to leave it alone; restored
+            # on aclose() so embedders are not permanently rescheduled.
+            self._prev_switch_interval = sys.getswitchinterval()
+            sys.setswitchinterval(self.gil_switch_interval_s)
+        self._work = asyncio.Event()
+        self._gate = asyncio.Event()
+        self._gate.set()
+        self._server = await asyncio.start_server(self._handle_conn, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._dispatch_task = asyncio.ensure_future(self._dispatch_loop())
+        return self
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "start() first"
+        await self._server.serve_forever()
+
+    def run_on_engine(self, fn, *args):
+        """Run ``fn`` on the render-executor thread; returns its Future.
+
+        The public hook for engine maintenance from outside the loop
+        (cache invalidation between benchmark laps, model hot-swaps): the
+        single render executor is the only thread allowed to touch the
+        serving engine, and queueing through it serializes behind any
+        in-flight wave instead of racing one."""
+        return self._render_exec.submit(fn, *args)
+
+    def pause(self) -> None:
+        """Hold dispatch (admission + shedding continue). Loop thread only."""
+        self._gate.clear()
+
+    def resume(self) -> None:
+        self._gate.set()
+
+    async def aclose(self) -> None:
+        """Stop accepting, drop connections, close the serving engine."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        if self._dispatch_task is not None:
+            self._dispatch_task.cancel()
+            await asyncio.gather(self._dispatch_task, return_exceptions=True)
+        if self._deliver_task is not None:  # flush in-flight responses first
+            await asyncio.gather(self._deliver_task, return_exceptions=True)
+        for writer in list(self._writers.values()):
+            writer.close()
+        for task in list(self._conn_tasks):
+            task.cancel()
+        if self._conn_tasks:
+            await asyncio.gather(*self._conn_tasks, return_exceptions=True)
+        # the render executor serializes this behind any in-flight wave, so
+        # the engine closes from the same (only) thread that ever drove it
+        loop = asyncio.get_running_loop()
+        await loop.run_in_executor(self._render_exec, self.manager.close)
+        self._render_exec.shutdown(wait=True)
+        self._encode_exec.shutdown(wait=True)
+        if self._prev_switch_interval is not None:
+            sys.setswitchinterval(self._prev_switch_interval)
+            self._prev_switch_interval = None
+
+    # ------------------------------------------------------------ connections
+    async def _handle_conn(self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter):
+        session = Session(queue_limit=self.queue_limit, delta_encoding=self.delta_encoding)
+        self._sessions[session.session_id] = session
+        self._writers[session.session_id] = writer
+        self._conn_tasks.add(asyncio.current_task())
+        self.connections_total += 1
+        try:
+            while True:
+                try:
+                    # requests carry everything in the header; a peer
+                    # declaring a fat payload is hostile or confused
+                    msg = await proto.read_message(reader, max_payload=1 << 16)
+                except proto.ProtocolError as e:
+                    # framing is gone — tell the peer once and hang up
+                    self.protocol_errors += 1
+                    await self._send(session, {"type": proto.ERROR, "code": BAD_REQUEST,
+                                               "detail": str(e)})
+                    break
+                if msg is None:
+                    break
+                header, _payload = msg
+                if not await self._handle_message(session, header):
+                    break
+        except (asyncio.CancelledError, ConnectionError):
+            pass
+        finally:
+            self._sessions.pop(session.session_id, None)
+            self._writers.pop(session.session_id, None)
+            self._conn_tasks.discard(asyncio.current_task())
+            session.queue.clear()  # abandoned: the client is gone
+            writer.close()
+
+    async def _handle_message(self, session: Session, header: dict) -> bool:
+        """Process one parsed message; False ends the connection."""
+        mtype = header.get("type")
+        seq = header.get("seq")
+        if mtype == proto.HELLO:
+            await self._send(session, {
+                "type": proto.HELLO_OK,
+                "protocol": proto.VERSION,
+                "streams": self.manager.describe(),
+                "img_h": self.manager.cfg.img_h,
+                "img_w": self.manager.cfg.img_w,
+                "delta": self.delta_encoding,
+                "session": session.session_id,
+            })
+        elif mtype == proto.RENDER:
+            await self._admit_renders(session, header, [header.get("timestep", 0)])
+        elif mtype == proto.SCRUB:
+            ts = header.get("timesteps") or []
+            if isinstance(ts, list):
+                # defensive dedupe for third-party clients: one response per
+                # timestep is the contract a per-seq fan-in counts against
+                try:
+                    ts = list(dict.fromkeys(ts))
+                except TypeError:
+                    pass  # unhashable entries become bad_request in _admit_renders
+            if not isinstance(ts, list) or not ts:
+                self.request_errors += 1
+                session.errors_sent += 1
+                await self._send(session, {"type": proto.ERROR, "seq": seq,
+                                           "code": BAD_REQUEST,
+                                           "detail": "scrub needs a timesteps list"})
+                return True
+            await self._admit_renders(session, header, ts)
+        elif mtype == proto.STATS:
+            # session/gateway counters snapshot on the LOOP thread (they are
+            # mutated here — reading them from another thread races dict
+            # iteration); only the engine report crosses to the render
+            # executor, whose single thread owns every server metric
+            report = self._gateway_stats()
+            loop = asyncio.get_running_loop()
+            report.update(await loop.run_in_executor(
+                self._render_exec, self.manager.report
+            ))
+            await self._send(session, {"type": proto.STATS_OK, "seq": seq,
+                                       "report": report})
+        elif mtype == proto.BYE:
+            return False
+        else:
+            self.protocol_errors += 1
+            session.errors_sent += 1
+            await self._send(session, {"type": proto.ERROR, "seq": seq,
+                                       "code": BAD_REQUEST,
+                                       "detail": f"unknown message type {mtype!r}"})
+        return True
+
+    async def _admit_renders(
+        self, session: Session, header: dict, timesteps: list
+    ) -> None:
+        """Admission-control render/scrub items into the session queue."""
+        seq = header.get("seq")
+        stream_id = header.get("stream", "")
+        try:
+            cam = proto.camera_from_wire(header.get("camera") or {})
+            resolved = [
+                (int(t), self.manager.resolve(stream_id, t)) for t in timesteps
+            ]
+        except (proto.ProtocolError, KeyError, TypeError, ValueError) as e:
+            # malformed fields (non-int timesteps included) answer with a
+            # bad_request frame instead of killing the connection handler
+            self.request_errors += 1
+            session.errors_sent += 1
+            await self._send(session, {"type": proto.ERROR, "seq": seq,
+                                       "code": BAD_REQUEST, "detail": str(e)})
+            return
+        # a scrub is ONE admission unit: its fan-out may exceed the session
+        # queue limit (it is bounded by the registered timeline length), and
+        # the oldest-drop shed must never evict the scrub's own items — a
+        # full-timeline scrub would otherwise deterministically shed itself
+        limit = max(session.queue_limit, len(resolved))
+        bulk = len(resolved) > 1
+        for i, (t, global_ts) in enumerate(resolved):
+            victim = session.admit(PendingRender(
+                session=session, seq=seq, stream_id=stream_id, timestep=t,
+                global_ts=global_ts, cam=cam, t_admit=time.perf_counter(),
+                scrub_last=i == len(resolved) - 1, bulk=bulk,
+            ), limit=limit)
+            if victim is not None:
+                self.shed_sent += 1
+                victim.session.errors_sent += 1
+                await self._send(victim.session, {
+                    "type": proto.ERROR, "seq": victim.seq, "code": SHED,
+                    "stream": victim.stream_id, "timestep": victim.timestep,
+                    "detail": "session queue full: oldest request shed",
+                })
+        self._work.set()
+
+    # -------------------------------------------------------------- dispatch
+    async def _coalesce(self) -> None:
+        """Give a concurrent wavefront one beat to finish landing.
+
+        N clients answering the previous wave submit near-simultaneously,
+        but their reader tasks need event-loop turns to parse; cutting a
+        wave on the FIRST arrival renders fragment micro-batches (measured:
+        mean batch 1.7 vs 4 for the same trace in-process). Hold until
+        enough requests are queued to fill a device micro-batch — or the
+        window expires. Worst-case added latency is ``coalesce_ms``, an
+        order below a render; batching efficiency dominates."""
+        if self.coalesce_ms <= 0:
+            return
+        target = self.manager.server.batcher.max_batch
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + self.coalesce_ms / 1e3
+        while loop.time() < deadline:
+            if sum(len(s.queue) for s in self._sessions.values()) >= target:
+                return
+            await asyncio.sleep(self.coalesce_ms / 8e3)
+
+    async def _dispatch_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            await self._work.wait()
+            self._work.clear()
+            while True:
+                await self._gate.wait()
+                await self._coalesce()
+                wave: list[PendingRender] = []
+                for session in list(self._sessions.values()):
+                    wave.extend(session.take(self.wave_per_session))
+                if not wave:
+                    break
+                self.waves += 1
+                t0 = time.perf_counter()
+                try:
+                    results = await loop.run_in_executor(
+                        self._render_exec, self._render_wave, wave
+                    )
+                except Exception:  # noqa: BLE001 - last-ditch: the dispatcher
+                    self.engine_errors += 1  # must outlive any engine surprise
+                    continue
+                finally:
+                    self.render_wait_s += time.perf_counter() - t0
+                # deliver (encode + write) in a CHAINED background task and
+                # immediately collect the next wave: clients that request
+                # ahead (any streaming viewer) keep the render thread busy
+                # while the previous wave compresses and hits the sockets —
+                # the gateway-level analogue of the server's in-flight ring.
+                # Chaining (each deliver awaits its predecessor) preserves
+                # per-session response order and the delta-encode lockstep.
+                self._deliver_task = asyncio.ensure_future(
+                    self._deliver(results, self._deliver_task)
+                )
+
+    async def _deliver(self, results: list, prev: asyncio.Task | None) -> None:
+        if prev is not None:
+            await asyncio.gather(prev, return_exceptions=True)
+        try:
+            await self._deliver_inner(results)
+        except Exception:  # noqa: BLE001 - a failed wave must not vanish
+            # without this, the successor's gather(return_exceptions=True)
+            # would silently eat the exception and every counter would read
+            # "all fine" while a whole wave of clients hangs
+            self.delivery_errors += 1
+
+    async def _deliver_inner(self, results: list) -> None:
+        loop = asyncio.get_running_loop()
+        t1 = time.perf_counter()
+        # One executor hop encodes the WHOLE wave (per-frame hops cost a
+        # thread wakeup + loop wakeup each — measurable at localhost rates).
+        # Small waves skip the hop entirely: an executor round-trip costs
+        # milliseconds of wakeup latency under load, while quantize+zlib on
+        # a few hundred KB costs tens of microseconds — "off-loop" is for
+        # production-resolution frames, not for work cheaper than the hop.
+        wave_bytes = sum(
+            frame.nbytes for _, frame, err in results if err is None
+        )
+        if wave_bytes <= self.inline_encode_bytes:
+            encoded = self._encode_wave(results)
+        else:
+            encoded = await loop.run_in_executor(
+                self._encode_exec, self._encode_wave, results
+            )
+        t2 = time.perf_counter()
+        self.encode_wait_s += t2 - t1
+        for pr, err, header, payload in encoded:
+            if err is not None:
+                self.request_errors += 1
+                pr.session.errors_sent += 1
+                await self._send(pr.session, {
+                    "type": proto.ERROR, "seq": pr.seq, "code": RENDER_ERROR,
+                    "stream": pr.stream_id, "timestep": pr.timestep,
+                    "detail": str(err),
+                })
+                continue
+            if await self._send(pr.session, header, payload):
+                self.frames_sent += 1
+                pr.session.frames_sent += 1
+        self.write_s += time.perf_counter() - t2
+
+    def _encode_wave(self, results: list) -> list:
+        """Encode executor only: quantize+compress one wave's frames."""
+        out = []
+        for pr, frame, err in results:
+            if err is not None:
+                out.append((pr, err, None, None))
+                continue
+            meta, payload = pr.session.encoder.encode(pr.stream_id, frame)
+            out.append((pr, None, {
+                "type": proto.FRAME, "seq": pr.seq, "stream": pr.stream_id,
+                "timestep": pr.timestep, "last": pr.scrub_last, **meta,
+            }, payload))
+        return out
+
+    def _render_wave(self, wave: list[PendingRender]) -> list:
+        """Render executor only: the sole code path touching the engine.
+
+        Never lets an exception escape — an engine failure mid-batch becomes
+        per-request error results, so the dispatcher task survives and every
+        waiting client gets an answer instead of a silent permanent hang."""
+        server = self.manager.server
+        out, futs = [], []
+        for pr in wave:
+            try:
+                futs.append((pr, server.submit(
+                    pr.cam, timestep=pr.global_ts, client_id=pr.session.session_id,
+                    t_submit=pr.t_admit,
+                )))
+            except Exception as e:  # bad state (e.g. closing): fail just this one
+                out.append((pr, None, e))
+        try:
+            server.run()  # drain the queue + the pipelined in-flight ring
+            run_err = None
+        except Exception as e:
+            run_err = e
+        for pr, fut in futs:
+            try:
+                if run_err is not None and not fut.done():
+                    out.append((pr, None, run_err))
+                else:
+                    out.append((pr, fut.result(), None))
+            except Exception as e:
+                out.append((pr, None, e))
+        return out
+
+    async def _send(self, session: Session, header: dict, payload: bytes = b"") -> bool:
+        writer = self._writers.get(session.session_id)
+        if writer is None:
+            self.dropped_writes += 1
+            return False
+        try:
+            self.bytes_out += await proto.write_message(writer, header, payload)
+            return True
+        except (OSError, RuntimeError):  # peer vanished / transport broke
+            self.dropped_writes += 1
+            return False
+
+    # --------------------------------------------------------------- metrics
+    def report(self) -> dict:
+        """Gateway + session + serving-engine metrics. Call from the loop
+        thread (or while the gateway is quiescent); the stats message
+        handler composes the same parts thread-correctly."""
+        return {**self._gateway_stats(), **self.manager.report()}
+
+    def _gateway_stats(self) -> dict:
+        """Loop-thread-owned counters + per-session snapshots."""
+        return {
+            "gateway": {
+                "host": self.host,
+                "port": self.port,
+                "connections_total": self.connections_total,
+                "sessions_now": len(self._sessions),
+                "frames_sent": self.frames_sent,
+                "shed": self.shed_sent,
+                "protocol_errors": self.protocol_errors,
+                "request_errors": self.request_errors,
+                "dropped_writes": self.dropped_writes,
+                "delivery_errors": self.delivery_errors,
+                "engine_errors": self.engine_errors,
+                "bytes_out": self.bytes_out,
+                "waves": self.waves,
+                "queue_limit": self.queue_limit,
+                "wave_per_session": self.wave_per_session,
+                "render_wait_s": round(self.render_wait_s, 4),
+                "encode_wait_s": round(self.encode_wait_s, 4),
+                "write_s": round(self.write_s, 4),
+            },
+            "sessions": {s.session_id: s.stats() for s in self._sessions.values()},
+        }
+
+
+# --------------------------------------------------------------------------
+# thread-hosted gateway (tests, benchmarks, in-process embedding)
+# --------------------------------------------------------------------------
+class GatewayThread:
+    """Run a gateway's event loop on a daemon thread; sync start/stop."""
+
+    def __init__(self, gateway: Gateway):
+        self.gateway = gateway
+        self.loop = asyncio.new_event_loop()
+        self._ready = threading.Event()
+        self._startup_error: BaseException | None = None
+        self._thread = threading.Thread(target=self._run, name="gs-gateway", daemon=True)
+
+    def _run(self) -> None:
+        asyncio.set_event_loop(self.loop)
+        try:
+            self.loop.run_until_complete(self.gateway.start())
+        except BaseException as e:
+            self._startup_error = e
+            self._ready.set()
+            return
+        self._ready.set()
+        self.loop.run_forever()
+        self.loop.run_until_complete(self.loop.shutdown_asyncgens())
+        self.loop.close()
+
+    def start(self, timeout: float = 30.0) -> "GatewayThread":
+        self._thread.start()
+        if not self._ready.wait(timeout):
+            raise TimeoutError("gateway event loop failed to come up")
+        if self._startup_error is not None:
+            raise self._startup_error
+        return self
+
+    @property
+    def port(self) -> int:
+        return self.gateway.port
+
+    def call(self, coro, timeout: float = 60.0):
+        """Run a coroutine on the gateway loop from any thread."""
+        return asyncio.run_coroutine_threadsafe(coro, self.loop).result(timeout)
+
+    def call_soon(self, fn, *args) -> None:
+        self.loop.call_soon_threadsafe(fn, *args)
+
+    def stop(self, timeout: float = 60.0) -> None:
+        if self._startup_error is None and self.loop.is_running():
+            asyncio.run_coroutine_threadsafe(self.gateway.aclose(), self.loop).result(timeout)
+            self.loop.call_soon_threadsafe(self.loop.stop)
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "GatewayThread":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

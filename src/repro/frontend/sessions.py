@@ -1,0 +1,231 @@
+"""Multi-stream session layer: many model timelines, one device pool.
+
+**Streams.** A *stream* is one servable model timeline behind a string id — a
+static trained scene (one timestep) or a ``TemporalCheckpointStore``-backed
+insitu sequence (many). All streams share ONE :class:`RenderServer`: the
+server's timeline is an integer axis, so the manager gives every stream a
+disjoint block of global positions (``base + local_timestep``, stride 2^20)
+and translates ids at the door. Sharing one server is the point — every
+stream's requests coalesce into the same micro-batcher, share the same
+in-flight ring, frame cache, and per-(shape, level, bucket) jit traces, so
+adding a stream costs model memory, not a second serving stack.
+
+**Sessions.** A *session* is one connected client: a bounded request queue,
+shed accounting, and the per-connection delta-encoder state. Admission
+control is oldest-drop load shedding: when a session's queue is full, the
+oldest still-queued request is dropped (and answered with ``error/shed``)
+rather than the newest — the viewer wants the freshest pose, and a bounded
+queue keeps one firehosing client from starving every other session (the
+per-session cap is the fairness mechanism; the shed counter is the metric).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Iterable, Mapping
+
+from repro.core import gaussians as G
+from repro.core.config import GSConfig
+from repro.core.projection import Camera
+from repro.frontend.encode import FrameEncoder
+from repro.serve_gs import RenderServer
+
+STREAM_STRIDE = 1 << 20  # global-timeline block reserved per stream
+
+STATIC, TIMELINE = "static", "timeline"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamInfo:
+    """One registered timeline: wire-visible description + base offset."""
+
+    stream_id: str
+    kind: str               # STATIC | TIMELINE
+    base: int               # global timeline position of local timestep 0
+    timesteps: tuple[int, ...]  # local (client-visible) timesteps
+    timestep_set: frozenset = frozenset()  # O(1) membership for resolve()
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "timesteps": list(self.timesteps)}
+
+
+class SessionManager:
+    """Registers streams on one shared ``RenderServer`` and owns its life."""
+
+    def __init__(self, cfg: GSConfig, **server_kw):
+        self.cfg = cfg
+        self._server_kw = dict(server_kw)
+        self.server: RenderServer | None = None
+        self.streams: dict[str, StreamInfo] = {}
+        self._next_base = 0
+
+    # ------------------------------------------------------------- register
+    def _register(
+        self, stream_id: str, kind: str, entries: Iterable[tuple[int, G.GaussianModel]]
+    ) -> StreamInfo:
+        if stream_id in self.streams:
+            raise ValueError(f"stream {stream_id!r} already registered")
+        entries = list(entries)
+        assert entries, f"stream {stream_id!r} has no timesteps"
+        locals_ = [int(t) for t, _ in entries]
+        assert all(0 <= t < STREAM_STRIDE for t in locals_), locals_
+        base = self._next_base
+        self._next_base += STREAM_STRIDE
+        for t, params in entries:
+            if self.server is None:
+                self.server = RenderServer(
+                    params, self.cfg, timestep=base + int(t), **self._server_kw
+                )
+            else:
+                self.server.add_timestep(base + int(t), params)
+        info = StreamInfo(stream_id, kind, base, tuple(locals_), frozenset(locals_))
+        self.streams[stream_id] = info
+        return info
+
+    def register_static(self, stream_id: str, params: G.GaussianModel) -> StreamInfo:
+        """One trained scene as a single-timestep stream."""
+        return self._register(stream_id, STATIC, [(0, params)])
+
+    def register_timeline(self, stream_id: str, source, timesteps=None) -> StreamInfo:
+        """A temporal sequence as a scrubbable stream.
+
+        ``source`` is anything with ``timesteps()`` and ``load(t)`` (a
+        ``TemporalCheckpointStore``) or a ``{timestep: params}`` mapping."""
+        if isinstance(source, Mapping):
+            entries = sorted((int(t), p) for t, p in source.items())
+        else:
+            ts = timesteps if timesteps is not None else source.timesteps()
+            entries = [(int(t), source.load(t)) for t in ts]
+        return self._register(stream_id, TIMELINE, entries)
+
+    # -------------------------------------------------------------- resolve
+    def resolve(self, stream_id: str, timestep: int = 0) -> int:
+        """(stream id, local timestep) -> global server timeline position."""
+        info = self.streams.get(stream_id)
+        if info is None:
+            raise KeyError(f"unknown stream {stream_id!r} (have {sorted(self.streams)})")
+        t = int(timestep)
+        if t not in info.timestep_set:  # a full-timeline scrub resolves every
+            raise KeyError(             # t on the loop thread: keep it O(1)
+                f"stream {stream_id!r} has no timestep {t} (have {list(info.timesteps)})"
+            )
+        return info.base + t
+
+    def describe(self) -> dict:
+        """Wire-facing listing for ``hello_ok``."""
+        return {sid: info.describe() for sid, info in self.streams.items()}
+
+    # ------------------------------------------------------------ lifecycle
+    def warmup(self) -> float:
+        """Compile every (shape, level, bucket) variant across all streams.
+
+        One representative timestep per stream suffices: timesteps within a
+        stream are shape-uniform (fixed capacity), distinct streams may not
+        be."""
+        assert self.server is not None, "no streams registered"
+        return self.server.warmup(
+            timesteps=[info.base + info.timesteps[0] for info in self.streams.values()]
+        )
+
+    def close(self) -> int:
+        """Close the shared server; returns failed queued requests."""
+        if self.server is None:
+            return 0
+        return self.server.close()
+
+    def __enter__(self) -> "SessionManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def report(self) -> dict:
+        return {
+            "streams": self.describe(),
+            "server": self.server.report() if self.server is not None else None,
+        }
+
+
+# --------------------------------------------------------------------------
+# per-connection sessions
+# --------------------------------------------------------------------------
+_session_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class PendingRender:
+    """One admitted-but-not-rendered request queued on a session."""
+
+    session: "Session"
+    seq: int
+    stream_id: str
+    timestep: int       # local (client-visible)
+    global_ts: int      # resolved server timeline position
+    cam: Camera
+    t_admit: float
+    scrub_last: bool = False  # final item of a scrub fan-out
+    bulk: bool = False        # part of a multi-item (scrub) admission unit
+
+
+class Session:
+    """One client connection's server-side state (queue, shed, encoder)."""
+
+    def __init__(self, *, queue_limit: int, delta_encoding: bool = True):
+        assert queue_limit >= 1, queue_limit
+        self.session_id = next(_session_ids)
+        self.queue_limit = queue_limit
+        self.queue: collections.deque[PendingRender] = collections.deque()
+        self.encoder = FrameEncoder(delta=delta_encoding)
+        self.shed = 0
+        self.admitted = 0
+        self.frames_sent = 0
+        self.errors_sent = 0
+        self.t_connect = time.perf_counter()
+
+    def admit(self, pr: PendingRender, *, limit: int | None = None) -> PendingRender | None:
+        """Queue one request; returns the request shed to make room (the
+        OLDEST *sheddable* one), or None when nothing was evicted.
+
+        ``limit`` stretches the cap for one admission (the gateway passes a
+        scrub's fan-out size, bounded by the stream's registered timeline
+        length). Shedding policy around ``bulk`` (scrub) items — an in-
+        progress scrub is one unit of work and must not be nibbled apart:
+
+        * a plain render never evicts a bulk item: if only bulk items are
+          queued the queue stretches by one instead (a later render then
+          sees THAT render as the oldest sheddable item, so the stretch is
+          bounded at one entry past the bulk block);
+        * a bulk item may evict bulk items of an OLDER scrub (a new scrub
+          displaces a stale one — the oldest-drop rule applied at message
+          granularity, which also bounds repeated-scrub queue growth) but
+          never items of its own seq.
+        """
+        victim = None
+        if len(self.queue) >= max(self.queue_limit, limit or 0):
+            for i, cand in enumerate(self.queue):  # oldest-first scan
+                if (not cand.bulk) or (pr.bulk and cand.seq != pr.seq):
+                    victim = cand
+                    del self.queue[i]
+                    self.shed += 1
+                    break
+        self.queue.append(pr)
+        self.admitted += 1
+        return victim
+
+    def take(self, n: int) -> list[PendingRender]:
+        """Pop up to ``n`` queued requests (FIFO) for a dispatch wave."""
+        return [self.queue.popleft() for _ in range(min(n, len(self.queue)))]
+
+    def stats(self) -> dict:
+        return {
+            "admitted": self.admitted,
+            "frames_sent": self.frames_sent,
+            "shed": self.shed,
+            "errors_sent": self.errors_sent,
+            "queued_now": len(self.queue),
+            "queue_limit": self.queue_limit,
+            "encoder": self.encoder.stats(),
+            "uptime_s": round(time.perf_counter() - self.t_connect, 3),
+        }

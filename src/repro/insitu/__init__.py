@@ -11,7 +11,7 @@ fixed-capacity Gaussian model tracking the isosurface:
 See ``repro.launch.insitu`` for the CLI driver and
 ``benchmarks/insitu_throughput.py`` for the warm-vs-cold methodology.
 """
-from repro.insitu.serve import build_timeline_server, scrub
+from repro.insitu.serve import build_timeline_server, scrub, timeline_stream
 from repro.insitu.store import TemporalCheckpointStore
 from repro.insitu.trainer import (
     InsituTrainer,
@@ -28,4 +28,5 @@ __all__ = [
     "fixed_capacity_init",
     "reseed_dead_slots",
     "scrub",
+    "timeline_stream",
 ]

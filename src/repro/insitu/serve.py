@@ -34,6 +34,18 @@ def build_timeline_server(
     return server
 
 
+def timeline_stream(manager, stream_id: str, store: TemporalCheckpointStore, *, timesteps=None):
+    """Expose a stored insitu sequence as a scrubbable network stream.
+
+    The frontend-facing twin of :func:`build_timeline_server`: instead of a
+    private server, the sequence is registered on a shared
+    ``repro.frontend.SessionManager`` pool under ``stream_id`` — remote
+    clients then scrub it with ``scrub`` messages while other streams
+    (static scenes, other runs) share the same device pool, micro-batcher,
+    and frame cache. Returns the registered ``StreamInfo``."""
+    return manager.register_timeline(stream_id, store, timesteps=timesteps)
+
+
 def scrub(server: RenderServer, cam: Camera, timesteps: list[int]) -> dict[int, np.ndarray]:
     """Request the same camera across ``timesteps``; returns t -> frame.
 

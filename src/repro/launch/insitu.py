@@ -39,29 +39,29 @@ def scrub_smoke(
     ``store_frames=False`` (the production serving configuration): frames
     arrive through each request's ``FrameFuture``, nothing is pinned."""
     ts = store.timesteps()[:n_scrub]
-    server = build_timeline_server(
+    with build_timeline_server(
         store, cfg, n_levels=2, max_batch=2, store_frames=False,
         pipeline_depth=pipeline_depth,
-    )
-    cam = front_camera(server.pyramid, img_h=cfg.img_h, img_w=cfg.img_w)
+    ) as server:
+        cam = front_camera(server.pyramid, img_h=cfg.img_h, img_w=cfg.img_w)
 
-    frames = scrub(server, cam, ts)
-    misses_first = server.cache.misses
-    frames2 = scrub(server, cam, ts)  # replay: must be pure cache hits
-    diffs = {
-        f"{a}->{b}": float(np.abs(frames[a] - frames[b]).max()) for a, b in zip(ts, ts[1:])
-    }
-    return {
-        "timesteps": ts,
-        "frame_shape": list(frames[ts[0]].shape),
-        "max_abs_frame_delta": diffs,
-        "frames_distinct": all(d > 1e-4 for d in diffs.values()),
-        "replay_identical": all(np.array_equal(frames[t], frames2[t]) for t in ts),
-        "replay_cache_hits": server.cache.hits,
-        "replay_new_misses": server.cache.misses - misses_first,
-        "pipeline": server.report()["pipeline"],
-        "timeline": server.report()["timeline"],
-    }
+        frames = scrub(server, cam, ts)
+        misses_first = server.cache.misses
+        frames2 = scrub(server, cam, ts)  # replay: must be pure cache hits
+        diffs = {
+            f"{a}->{b}": float(np.abs(frames[a] - frames[b]).max()) for a, b in zip(ts, ts[1:])
+        }
+        return {
+            "timesteps": ts,
+            "frame_shape": list(frames[ts[0]].shape),
+            "max_abs_frame_delta": diffs,
+            "frames_distinct": all(d > 1e-4 for d in diffs.values()),
+            "replay_identical": all(np.array_equal(frames[t], frames2[t]) for t in ts),
+            "replay_cache_hits": server.cache.hits,
+            "replay_new_misses": server.cache.misses - misses_first,
+            "pipeline": server.report()["pipeline"],
+            "timeline": server.report()["timeline"],
+        }
 
 
 def main(argv=None):
@@ -114,47 +114,48 @@ def main(argv=None):
     )
     stream = synthetic_stream(args.dataset, args.timesteps, res=args.volume_res, t1=args.t1)
     store_dir = args.ckpt or os.path.join(tempfile.mkdtemp(prefix="insitu_"), "seq")
-    store = TemporalCheckpointStore(
+    # context manager: queued background writes survive (flush + writer join)
+    # even when a later stage of this driver raises
+    with TemporalCheckpointStore(
         store_dir, keyframe_interval=args.keyframe_interval,
         async_writes=not args.sync_store,
-    )
-    if store.timesteps():
-        raise SystemExit(
-            f"temporal store {store_dir} already holds timesteps {store.timesteps()}; "
-            "this driver records a fresh sequence from t=0 — pass a new --ckpt dir"
-        )
+    ) as store:
+        if store.timesteps():
+            raise SystemExit(
+                f"temporal store {store_dir} already holds timesteps {store.timesteps()}; "
+                "this driver records a fresh sequence from t=0 — pass a new --ckpt dir"
+            )
 
-    trainer = InsituTrainer(
-        cfg, mesh,
-        capacity_factor=args.capacity_factor,
-        cold_steps=args.cold_steps, warm_steps=args.warm_steps,
-        n_views=args.views, max_points=args.max_points,
-        n_steps_raymarch=args.raymarch_steps, init_scale=0.06, verbose=True,
-    )
-    print(
-        f"insitu: {args.dataset} x{args.timesteps} timesteps, vol {args.volume_res}^3, "
-        f"{args.res}px, mesh {dict(mesh.shape)}, store {store_dir}"
-    )
-    reports = trainer.run(stream, store=store)
-
-    out = {
-        "config": {
-            "dataset": args.dataset, "timesteps": args.timesteps, "res": args.res,
-            "volume_res": args.volume_res, "capacity": trainer.capacity,
-            "cold_steps": args.cold_steps, "warm_steps": args.warm_steps,
-        },
-        "timesteps": [
-            {k: v for k, v in dataclasses.asdict(r).items() if k != "psnr_curve"}
-            for r in reports
-        ],
-        "recompile_count": trainer.n_traces,
-        "store": store.stats(),
-    }
-    if not args.no_scrub:
-        out["scrub"] = scrub_smoke(
-            store, cfg, n_scrub=min(3, args.timesteps), pipeline_depth=args.pipeline_depth
+        trainer = InsituTrainer(
+            cfg, mesh,
+            capacity_factor=args.capacity_factor,
+            cold_steps=args.cold_steps, warm_steps=args.warm_steps,
+            n_views=args.views, max_points=args.max_points,
+            n_steps_raymarch=args.raymarch_steps, init_scale=0.06, verbose=True,
         )
-    store.close()
+        print(
+            f"insitu: {args.dataset} x{args.timesteps} timesteps, vol {args.volume_res}^3, "
+            f"{args.res}px, mesh {dict(mesh.shape)}, store {store_dir}"
+        )
+        reports = trainer.run(stream, store=store)
+
+        out = {
+            "config": {
+                "dataset": args.dataset, "timesteps": args.timesteps, "res": args.res,
+                "volume_res": args.volume_res, "capacity": trainer.capacity,
+                "cold_steps": args.cold_steps, "warm_steps": args.warm_steps,
+            },
+            "timesteps": [
+                {k: v for k, v in dataclasses.asdict(r).items() if k != "psnr_curve"}
+                for r in reports
+            ],
+            "recompile_count": trainer.n_traces,
+            "store": store.stats(),
+        }
+        if not args.no_scrub:
+            out["scrub"] = scrub_smoke(
+                store, cfg, n_scrub=min(3, args.timesteps), pipeline_depth=args.pipeline_depth
+            )
 
     txt = json.dumps(out, indent=1)
     print(txt)

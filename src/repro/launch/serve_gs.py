@@ -83,7 +83,7 @@ def main(argv=None):
         )
     cfg = GSConfig(img_h=args.res, img_w=args.res, k_per_tile=128 if args.smoke else 256)
 
-    server = RenderServer(
+    with RenderServer(
         params,
         cfg,
         n_levels=args.levels,
@@ -92,19 +92,19 @@ def main(argv=None):
         cache_capacity=args.cache,
         store_frames=False,
         pipeline_depth=args.pipeline_depth,
-    )
-    print(
-        f"serve_gs: {args.dataset} n={params.n} levels={server.pyramid.live_counts} "
-        f"res={args.res} clients={args.clients}x{args.requests}"
-    )
-    clients = make_clients(
-        args.clients,
-        n_views=args.orbit_views,
-        img_h=args.res,
-        img_w=args.res,
-        radius_spread=args.radius_spread,
-    )
-    report = run_load(server, clients, requests_per_client=args.requests, rate_hz=args.rate)
+    ) as server:
+        print(
+            f"serve_gs: {args.dataset} n={params.n} levels={server.pyramid.live_counts} "
+            f"res={args.res} clients={args.clients}x{args.requests}"
+        )
+        clients = make_clients(
+            args.clients,
+            n_views=args.orbit_views,
+            img_h=args.res,
+            img_w=args.res,
+            radius_spread=args.radius_spread,
+        )
+        report = run_load(server, clients, requests_per_client=args.requests, rate_hz=args.rate)
     report["config"] = {
         "res": args.res,
         "clients": args.clients,

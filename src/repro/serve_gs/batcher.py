@@ -92,6 +92,13 @@ class MicroBatcher:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def clear(self) -> int:
+        """Drop every queued request (server shutdown); returns the count.
+        The caller owns failing the dropped requests' futures."""
+        n = self.pending
+        self._queues.clear()
+        return n
+
     def bucket_for(self, n: int) -> int:
         for b in self.buckets:
             if b >= n:

@@ -72,12 +72,13 @@ class FrameFuture:
     the cache and every deduped waiter) — ``.copy()`` it to mutate.
     """
 
-    __slots__ = ("key", "requests", "_frame", "_server")
+    __slots__ = ("key", "requests", "_frame", "_error", "_server")
 
     def __init__(self, server: "RenderServer", key: tuple, req: RenderRequest):
         self.key = key
         self.requests: list[RenderRequest] = [req]
         self._frame: np.ndarray | None = None
+        self._error: BaseException | None = None
         self._server = server
 
     @property
@@ -86,11 +87,16 @@ class FrameFuture:
         return self.requests[0].request_id
 
     def done(self) -> bool:
-        return self._frame is not None
+        return self._frame is not None or self._error is not None
 
     def result(self) -> np.ndarray:
-        """The frame, blocking (and driving the pipeline) until it lands."""
+        """The frame, blocking (and driving the pipeline) until it lands.
+
+        Raises the failure instead if the future was failed (e.g. the server
+        was closed while this request was still queued)."""
         while self._frame is None:
+            if self._error is not None:
+                raise self._error
             if not self._server._advance():
                 raise RuntimeError(
                     f"FrameFuture {self.key} cannot resolve: server pipeline is idle"
@@ -99,8 +105,13 @@ class FrameFuture:
 
     # -------------------------------------------------------------- internal
     def _attach(self, req: RenderRequest) -> None:
-        assert self._frame is None, "cannot attach to a resolved future"
+        assert not self.done(), "cannot attach to a resolved future"
         self.requests.append(req)
+
+    def _fail(self, err: BaseException) -> None:
+        """Mark every attached request as failed; ``result()`` raises."""
+        assert self._frame is None, "cannot fail a resolved future"
+        self._error = err
 
     def _resolve(self, frame: np.ndarray) -> int:
         """Deliver ``frame`` to every attached request; returns the count."""
@@ -197,6 +208,7 @@ class RenderServer:
         self._ring: collections.deque[_InFlight] = collections.deque()
         self._pending: dict[tuple, FrameFuture] = {}  # in-flight key -> future
         self.deduped = 0
+        self._closed = False
 
         # ---- metrics
         self._latencies: list[float] = []
@@ -308,6 +320,8 @@ class RenderServer:
         (one render serves every concurrent duplicate); everything else is
         queued for the next micro-batch.
         """
+        if self._closed:
+            raise RuntimeError("RenderServer is closed")
         t = time.perf_counter() if t_submit is None else t_submit
         if self._t_first is None:
             self._t_first = t
@@ -406,6 +420,39 @@ class RenderServer:
         while self.batcher.pending or self._ring:
             done += self.step()
         return done
+
+    # -------------------------------------------------------------- lifecycle
+    def close(self) -> int:
+        """Shut the server down; returns how many queued requests were failed.
+
+        Retires (i.e. completes) every dispatched in-flight batch, then fails
+        the futures of requests still waiting in the batcher queue with a
+        ``RuntimeError`` (their ``result()`` raises instead of spinning on a
+        dead pipeline), drops the queue, and releases the retirement buffer.
+        Idempotent; ``submit`` after close raises."""
+        if self._closed:
+            return 0
+        self._closed = True
+        self.flush()  # in-flight work completes — those clients get frames
+        failed = 0
+        err = RuntimeError("RenderServer closed before this request rendered")
+        for fut in self._pending.values():  # queued-but-never-dispatched only:
+            fut._fail(err)                  # retired keys left _pending above
+            failed += len(fut.requests)
+        self._pending.clear()
+        self.batcher.clear()
+        self.frames.clear()
+        return failed
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def __enter__(self) -> "RenderServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _advance(self) -> bool:
         """One pipeline unit on behalf of an awaited future; False if idle."""

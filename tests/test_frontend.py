@@ -1,0 +1,390 @@
+"""Network frontend tests: wire-protocol round-trips, encoder exactness,
+localhost gateway smoke, backpressure/shedding, and depth invariance
+through the network path."""
+import asyncio
+import socket
+
+import numpy as np
+import pytest
+
+from repro.core.config import GSConfig
+from repro.frontend import (
+    AsyncFrontendClient,
+    FrameDecoder,
+    FrameEncoder,
+    FrontendClient,
+    Gateway,
+    GatewayThread,
+    ProtocolError,
+    SessionManager,
+    ShedError,
+    iter_messages,
+    pack_message,
+    quantize_rgb8,
+)
+from repro.frontend import protocol as proto
+from repro.serve_gs import RenderServer
+
+from conftest import make_cam, make_scene
+
+H = W = 32
+
+
+# ================================================================= protocol
+def test_protocol_roundtrip_fuzz_over_sizes():
+    """Messages of many header/payload sizes — including 0-byte payloads —
+    survive pack -> concatenate -> parse bit-for-bit."""
+    rng = np.random.default_rng(0)
+    msgs = []
+    for i, size in enumerate([0, 1, 2, 7, 64, 1023, 4096, 65537]):
+        header = {"type": "frame", "seq": i, "meta": "x" * (i * 37), "uni": "画像☃"}
+        msgs.append((header, rng.bytes(size)))
+    buf = b"".join(pack_message(h, p) for h, p in msgs)
+    out = list(iter_messages(buf))
+    assert len(out) == len(msgs)
+    for (h0, p0), (h1, p1) in zip(msgs, out):
+        assert h0 == h1 and p0 == p1
+
+
+def test_protocol_rejects_bad_magic_version_and_truncation():
+    good = pack_message({"type": "hello"}, b"abc")
+    with pytest.raises(ProtocolError, match="magic"):
+        list(iter_messages(b"XX" + good[2:]))
+    with pytest.raises(ProtocolError, match="protocol v9"):
+        list(iter_messages(good[:2] + bytes([9]) + good[3:]))
+    with pytest.raises(ProtocolError, match="truncated"):
+        list(iter_messages(good[:-1]))
+    with pytest.raises(ProtocolError, match="short prefix"):
+        list(iter_messages(good[:5]))
+
+
+def test_protocol_async_reader_reassembles_split_frames():
+    """read_message must reassemble messages fed byte-dribbled into the
+    stream, and report clean EOF (None) only at a frame boundary."""
+
+    async def run():
+        msgs = [({"type": "a", "seq": 0}, b""), ({"type": "b", "seq": 1}, b"\x00" * 100)]
+        data = b"".join(pack_message(h, p) for h, p in msgs)
+        reader = asyncio.StreamReader()
+        # dribble in uneven chunks to exercise partial-read reassembly
+        for i in range(0, len(data), 7):
+            reader.feed_data(data[i : i + 7])
+        reader.feed_eof()
+        out = [await proto.read_message(reader) for _ in range(2)]
+        assert [h["type"] for h, _ in out] == ["a", "b"]
+        assert out[1][1] == b"\x00" * 100
+        assert await proto.read_message(reader) is None  # clean EOF
+
+        # EOF mid-frame is a protocol error, not a silent None
+        reader2 = asyncio.StreamReader()
+        reader2.feed_data(data[: len(data) - 3])
+        reader2.feed_eof()
+        await proto.read_message(reader2)
+        with pytest.raises(ProtocolError, match="mid-message"):
+            await proto.read_message(reader2)
+
+    asyncio.run(run())
+
+
+def test_camera_wire_roundtrip():
+    cam = make_cam(H, W, dist=2.5)
+    d = proto.camera_to_wire(cam)
+    cam2 = proto.camera_from_wire(d)
+    np.testing.assert_allclose(np.asarray(cam.viewmat), cam2.viewmat, atol=1e-6)
+    assert float(cam2.fx) == pytest.approx(float(np.asarray(cam.fx)))
+    with pytest.raises(ProtocolError, match="camera"):
+        proto.camera_from_wire({"viewmat": [1, 2, 3]})
+
+
+# =================================================================== encode
+def test_delta_encoding_is_exact_and_smaller_on_similar_frames():
+    rng = np.random.default_rng(1)
+    enc, dec = FrameEncoder(), FrameDecoder()
+    base = rng.random((24, 24, 3)).astype(np.float32)
+    raw_bytes = None
+    for step in range(4):
+        frame = np.clip(base + 0.002 * step, 0, 1)
+        meta, payload = enc.encode("s", frame)
+        got = dec.decode("s", meta, payload)
+        np.testing.assert_array_equal(got, quantize_rgb8(frame))  # exact
+        if step == 0:
+            assert meta["encoding"] == "rgb8"
+            raw_bytes = len(payload)
+        else:
+            assert meta["encoding"] == "zdelta8"
+            assert len(payload) < raw_bytes  # near-identical frames compress
+    # independent per-stream chains: a new stream starts with a keyframe
+    meta2, _ = enc.encode("other", base)
+    assert meta2["encoding"] == "rgb8"
+
+
+def test_decoder_rejects_delta_without_base():
+    enc, dec = FrameEncoder(), FrameDecoder()
+    f = np.zeros((4, 4, 3), np.float32)
+    enc.encode("s", f)
+    meta, payload = enc.encode("s", f)
+    assert meta["encoding"] == "zdelta8"
+    with pytest.raises(ValueError, match="without a matching base"):
+        dec.decode("s", meta, payload)
+
+
+# ================================================================== gateway
+def _manager(g=None, *, pipeline_depth=2, timeline_steps=2, **kw):
+    g = g if g is not None else make_scene(n=256, scale=0.06)
+    cfg = GSConfig(img_h=H, img_w=W, k_per_tile=64)
+    kw.setdefault("n_levels", 1)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("store_frames", False)
+    mgr = SessionManager(cfg, pipeline_depth=pipeline_depth, **kw)
+    mgr.register_static("static", g)
+    if timeline_steps:
+        from repro.launch.frontend import synthetic_timeline
+
+        mgr.register_timeline("timeline", synthetic_timeline(g, timeline_steps))
+    return mgr
+
+
+@pytest.fixture(scope="module")
+def gateway_thread():
+    mgr = _manager()
+    mgr.warmup()
+    with GatewayThread(Gateway(mgr, port=0, queue_limit=8)) as gt:
+        yield gt
+
+
+def test_gateway_smoke_multi_client_two_streams(gateway_thread):
+    """N sync clients render over localhost across both streams: every
+    request answered, zero shed, zero protocol errors, and the frames match
+    an in-process render of the same pose bit-for-bit (after RGB8)."""
+    gt = gateway_thread
+    cams = [make_cam(H, W, dist=2.0 + 0.25 * i) for i in range(4)]
+    clients = [FrontendClient("127.0.0.1", gt.port) for _ in range(4)]
+    try:
+        assert all(set(cl.streams) == {"static", "timeline"} for cl in clients)
+        frames = {}
+        for r in range(2):  # two rounds so delta encoding gets exercised
+            for i, cl in enumerate(clients):
+                frames[(r, i, "static")] = cl.render("static", cams[i])
+                frames[(r, i, "timeline")] = cl.render("timeline", cams[i], timestep=1)
+        stats = clients[0].stats()
+    finally:
+        for cl in clients:
+            cl.close()
+    gw = stats["gateway"]
+    assert gw["frames_sent"] == 16 and gw["shed"] == 0
+    assert gw["protocol_errors"] == 0 and gw["request_errors"] == 0
+    assert gw["dropped_writes"] == 0
+    # round 2 must be byte-identical to round 1 (same pose, cache or not)
+    for i in range(4):
+        np.testing.assert_array_equal(frames[(0, i, "static")], frames[(1, i, "static")])
+    # network frames == in-process serving engine frames for the same pose
+    ref = RenderServer(
+        make_scene(n=256, scale=0.06), GSConfig(img_h=H, img_w=W, k_per_tile=64),
+        n_levels=1, max_batch=4, store_frames=False,
+    )
+    with ref:
+        for i in range(4):
+            expect = quantize_rgb8(ref.submit(cams[i]).result())
+            np.testing.assert_array_equal(frames[(0, i, "static")], expect)
+
+
+def test_gateway_scrub_and_bad_requests(gateway_thread):
+    gt = gateway_thread
+    with FrontendClient("127.0.0.1", gt.port) as cl:
+        cam = make_cam(H, W)
+        frames = cl.scrub("timeline", cam, [0, 1])
+        assert sorted(frames) == [0, 1]
+        assert np.abs(frames[0].astype(int) - frames[1].astype(int)).max() > 0
+        from repro.frontend import RemoteRenderError
+
+        with pytest.raises(RemoteRenderError, match="no timestep"):
+            cl.render("timeline", cam, timestep=99)
+        with pytest.raises(RemoteRenderError, match="unknown stream"):
+            cl.render("nope", cam)
+        stats = cl.stats()
+    assert stats["gateway"]["request_errors"] >= 2
+    assert stats["gateway"]["protocol_errors"] == 0  # bad requests != protocol
+
+
+def test_gateway_rejects_garbage_bytes(gateway_thread):
+    """A peer that does not speak the protocol gets one error frame and a
+    hangup — and the counter records it."""
+    gt = gateway_thread
+    before = gt.gateway.protocol_errors
+    with socket.create_connection(("127.0.0.1", gt.port), timeout=10) as s:
+        s.sendall(b"GET / HTTP/1.1\r\n\r\n")
+        chunks = b""
+        while True:
+            b = s.recv(4096)
+            if not b:
+                break
+            chunks += b
+    (header, _), = iter_messages(chunks)
+    assert header["type"] == "error" and "magic" in header["detail"]
+    assert gt.gateway.protocol_errors == before + 1
+
+
+def test_malformed_timestep_answers_bad_request_not_disconnect(gateway_thread):
+    """A non-integer timestep is a bad_request answer, not a dead handler."""
+    gt = gateway_thread
+
+    def read_msg(sock):
+        buf = b""
+        while len(buf) < proto.PREFIX_SIZE:
+            buf += sock.recv(proto.PREFIX_SIZE - len(buf))
+        hlen, plen = proto.unpack_prefix(buf)
+        body = b""
+        while len(body) < hlen + plen:
+            body += sock.recv(hlen + plen - len(body))
+        return next(iter_messages(buf + body))
+
+    cam_wire = proto.camera_to_wire(make_cam(H, W))
+    with socket.create_connection(("127.0.0.1", gt.port), timeout=30) as s:
+        s.sendall(pack_message({"type": "hello"}))
+        assert read_msg(s)[0]["type"] == "hello_ok"
+        s.sendall(pack_message({
+            "type": "render", "seq": 5, "stream": "static",
+            "timestep": "abc", "camera": cam_wire,
+        }))
+        h, _ = read_msg(s)
+        assert h["type"] == "error" and h["code"] == "bad_request" and h["seq"] == 5
+        # the connection survives: a well-formed render still serves
+        s.sendall(pack_message({
+            "type": "render", "seq": 6, "stream": "static",
+            "timestep": 0, "camera": cam_wire,
+        }))
+        h, payload = read_msg(s)
+        assert h["type"] == "frame" and h["seq"] == 6 and len(payload) > 0
+
+
+def test_scrub_longer_than_queue_limit_never_sheds_itself():
+    """A full-timeline scrub is one admission unit: its fan-out may exceed
+    the per-session queue limit (bounded by the registered timeline) and
+    must never shed its own items."""
+    mgr = _manager(timeline_steps=6)
+    mgr.warmup()
+    with GatewayThread(Gateway(mgr, port=0, queue_limit=4)) as gt:
+        with FrontendClient("127.0.0.1", gt.port) as cl:
+            frames = cl.scrub("timeline", make_cam(H, W), list(range(6)))
+            stats = cl.stats()
+    assert sorted(frames) == list(range(6))
+    assert stats["gateway"]["shed"] == 0 and stats["gateway"]["request_errors"] == 0
+
+
+def test_interleaved_render_does_not_shed_in_progress_scrub():
+    """A plain render arriving while a long scrub is still queued must not
+    evict the scrub's items (it stretches the queue by one instead): the
+    scrub is one unit of work, only another scrub may displace it."""
+    mgr = _manager(timeline_steps=6)
+    mgr.warmup()
+    gw = Gateway(mgr, port=0, queue_limit=2)
+    with GatewayThread(gw) as gt:
+
+        async def run():
+            cl = AsyncFrontendClient("127.0.0.1", gt.port)
+            await cl.connect()
+            gt.call_soon(gw.pause)  # keep everything queued while we interleave
+            await asyncio.sleep(0.05)
+            scrub_task = asyncio.ensure_future(
+                cl.scrub("timeline", make_cam(H, W), list(range(6)))
+            )
+            await asyncio.sleep(0.1)  # the 6 scrub items are now admitted
+            rfut = await cl.submit_render("static", make_cam(H, W))
+            gt.call_soon(gw.resume)
+            frames = await scrub_task          # would ShedError before the fix
+            frame = await rfut                 # the render is served too
+            stats = await cl.stats()
+            await cl.close()
+            return frames, frame, stats
+
+        frames, frame, stats = asyncio.run(run())
+    assert sorted(frames) == list(range(6))
+    assert frame.shape == (H, W, 3)
+    assert stats["gateway"]["shed"] == 0
+
+
+# ------------------------------------------------------------- backpressure
+def test_backpressure_sheds_oldest_with_accounting():
+    """With dispatch held, a client firing more requests than its bounded
+    queue sheds the OLDEST queued seqs (answered with error/shed), keeps the
+    newest, and the shed metric accounts for every drop."""
+    mgr = _manager(timeline_steps=0)
+    mgr.warmup()
+    gw = Gateway(mgr, port=0, queue_limit=2)
+    with GatewayThread(gw) as gt:
+
+        async def run():
+            cl = AsyncFrontendClient("127.0.0.1", gt.port)
+            await cl.connect()
+            gt.call_soon(gw.pause)  # hold dispatch; admission keeps running
+            await asyncio.sleep(0.05)
+            futs = [
+                await cl.submit_render("static", make_cam(H, W, dist=2.0 + 0.3 * i))
+                for i in range(6)
+            ]
+            # wait until the 4 shed notices landed, then let the rest render
+            for fut in futs[:4]:
+                with pytest.raises(ShedError):
+                    await fut
+            gt.call_soon(gw.resume)
+            survivors = [await fut for fut in futs[4:]]
+            stats = await cl.stats()
+            await cl.close()
+            return survivors, stats
+
+        survivors, stats = asyncio.run(run())
+    assert len(survivors) == 2 and all(f.shape == (H, W, 3) for f in survivors)
+    gwstats = stats["gateway"]
+    assert gwstats["shed"] == 4 and gwstats["frames_sent"] == 2
+    (sess,) = stats["sessions"].values()
+    assert sess["shed"] == 4 and sess["admitted"] == 6
+    assert sess["queued_now"] == 0  # queue fully drained after resume
+    # shed + served == admitted: nothing dropped silently
+    assert sess["shed"] + sess["frames_sent"] == sess["admitted"]
+
+
+# --------------------------------------------------------- depth invariance
+def test_depth1_and_depth2_identical_through_network():
+    """The same request trace through a depth-1 (sync dispatch) gateway and
+    a depth-2 (pipelined) gateway yields bitwise-identical RGB8 frames."""
+    g = make_scene(n=256, scale=0.06)
+    cams = [make_cam(H, W, dist=2.0 + 0.2 * i) for i in range(3)]
+    results = {}
+    for depth in (1, 2):
+        mgr = _manager(g, pipeline_depth=depth)
+        mgr.warmup()
+        with GatewayThread(Gateway(mgr, port=0)) as gt:
+            with FrontendClient("127.0.0.1", gt.port) as cl:
+                frames = []
+                for cam in cams:
+                    frames.append(cl.render("static", cam))
+                    frames.append(cl.render("timeline", cam, timestep=1))
+                frames.append(cl.scrub("timeline", cams[0], [0, 1]))
+                stats = cl.stats()
+        assert stats["gateway"]["shed"] == 0
+        assert stats["gateway"]["protocol_errors"] == 0
+        results[depth] = frames
+    for a, b in zip(results[1], results[2]):
+        if isinstance(a, dict):
+            for t in a:
+                np.testing.assert_array_equal(a[t], b[t])
+        else:
+            np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------ session layer
+def test_session_manager_stream_isolation_and_resolve():
+    mgr = _manager(timeline_steps=3)
+    assert mgr.resolve("static", 0) == 0
+    base = mgr.streams["timeline"].base
+    assert base > 0 and mgr.resolve("timeline", 2) == base + 2
+    with pytest.raises(KeyError, match="unknown stream"):
+        mgr.resolve("missing", 0)
+    with pytest.raises(KeyError, match="no timestep"):
+        mgr.resolve("static", 1)
+    with pytest.raises(ValueError, match="already registered"):
+        mgr.register_static("static", make_scene(n=64))
+    # the shared pool really holds every stream's timeline entries
+    assert len(mgr.server.timesteps()) == 4
+    mgr.close()
+    assert mgr.server.closed

@@ -191,6 +191,42 @@ def test_scrub_works_with_store_frames_false(tmp_path):
     assert len(server.frames) == 0  # nothing pinned
 
 
+# ----------------------------------------------------------- server close()
+def test_close_fails_queued_futures_and_rejects_new_submits():
+    server = _server(cache_capacity=0)
+    fut = server.submit(make_cam(H, W))
+    assert server.close() == 1  # queued-but-never-dispatched request failed
+    with pytest.raises(RuntimeError, match="closed"):
+        fut.result()
+    assert fut.done()
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(make_cam(H, W))
+    assert server.close() == 0  # idempotent
+
+
+def test_close_retires_in_flight_work_before_failing_the_queue():
+    """close() drains the dispatched ring — those clients get real frames —
+    and only never-dispatched requests are failed."""
+    server = _server(pipeline_depth=2, max_batch=1, cache_capacity=0)
+    futs = [server.submit(make_cam(H, W, dist=2.0 + 0.3 * i)) for i in range(3)]
+    server.step()  # dispatches two micro-batches, retires one -> 1 in flight
+    assert server.in_flight == 1 and server.batcher.pending == 1
+    assert server.close() == 1
+    assert futs[0].result().shape == (H, W, 3)  # retired before close
+    assert futs[1].result().shape == (H, W, 3)  # in flight: close retired it
+    with pytest.raises(RuntimeError, match="closed"):
+        futs[2].result()  # still queued: failed loudly, no silent hang
+
+
+def test_close_releases_retirement_buffer_and_context_manager():
+    with _server(store_frames=True, frames_capacity=8) as server:
+        fut = server.submit(make_cam(H, W))
+        server.run()
+        assert len(server.frames) == 1
+    assert server.closed and len(server.frames) == 0
+    assert fut.result() is not None  # resolved futures survive close
+
+
 # ------------------------------------------------------- async store writer
 def test_async_and_sync_store_roundtrip_identically(tmp_path):
     import jax.numpy as jnp
