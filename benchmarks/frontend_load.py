@@ -149,6 +149,28 @@ async def one_client(cl: AsyncFrontendClient, reqs, lat, errors, window: int):
     return frames
 
 
+def aggregate_encoders(stats: dict) -> dict:
+    """Fold per-session encoder stats into one wire-cost record (sessions
+    vanish on disconnect, so this must run while the clients are live)."""
+    keys = ("tiles_total", "tiles_shipped", "tiles_reffed", "tile_frames",
+            "delta_frames", "raw_frames", "raw_fallbacks", "bytes_sent",
+            "bytes_raw_equiv")
+    tot = dict.fromkeys(keys, 0)
+    for s in stats.get("sessions", {}).values():
+        enc = s.get("encoder") or {}
+        for k in keys:
+            tot[k] += enc.get(k) or 0
+    tot["tiles_shipped_frac"] = (
+        round(tot["tiles_shipped"] / tot["tiles_total"], 4)
+        if tot["tiles_total"] else None
+    )
+    tot["compression"] = (
+        round(tot["bytes_raw_equiv"] / tot["bytes_sent"], 3)
+        if tot["bytes_sent"] else None
+    )
+    return tot
+
+
 async def drive_clients(host, port, trace, window) -> dict:
     """One measured lap: connect N clients, run the trace, disconnect."""
     clients = []
@@ -164,6 +186,8 @@ async def drive_clients(host, port, trace, window) -> dict:
             for cl, reqs in zip(clients, trace)
         ])
         wall = time.perf_counter() - t0
+        # wire-encoder stats live on the sessions: snapshot before disconnect
+        wire = aggregate_encoders(await clients[0].stats())
         n = sum(len(r) for r in trace)
         return {
             "completed": int(sum(frames)),
@@ -172,6 +196,7 @@ async def drive_clients(host, port, trace, window) -> dict:
             "p50_ms": round(_percentile([x * 1e3 for x in lat], 50), 3),
             "p99_ms": round(_percentile([x * 1e3 for x in lat], 99), 3),
             "client_errors": errors,
+            "wire": wire,
         }
     finally:
         for cl in clients:
@@ -284,6 +309,7 @@ def main(argv=None):
         "network": rep_net,
         "network_vs_inprocess": ratio,
         "gateway": gw,
+        "wire": rep_net["wire"],
     }
     print(json.dumps(report, indent=1))
     if args.out:
@@ -307,6 +333,10 @@ def main(argv=None):
                 "request_errors": gw["request_errors"],
                 "dropped_writes": gw["dropped_writes"],
                 "bytes_out": gw["bytes_out"],
+                "wire_compression": rep_net["wire"]["compression"] or 0.0,
+                "tiles_shipped_frac": rep_net["wire"]["tiles_shipped_frac"] or 0.0,
+                "tile_frames": rep_net["wire"]["tile_frames"],
+                "raw_fallbacks": rep_net["wire"]["raw_fallbacks"],
             },
         )
 

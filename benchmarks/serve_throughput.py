@@ -150,7 +150,9 @@ def main(argv=None):
     batched.warmup(buckets=(wave,))
     rep_batched = drive(batched, **load)
 
-    # ---- cached: shared-orbit clients revisit poses across LOD rings
+    # ---- cached: shared-orbit clients revisit poses across LOD rings.
+    # Runs the production tile-granular cache path (revisited poses are
+    # assembled from content-deduplicated tiles).
     cached = build_server(
         params, cfg, mesh=mesh_batched, max_batch=args.max_batch, cache_capacity=512, **common
     )
@@ -209,6 +211,7 @@ def main(argv=None):
         "cached": {
             "frames_per_s": rep_cached["frames_per_s"],
             "cache": rep_cached["cache"],
+            "tiles": rep_cached["tiles"],
             "requests_per_level": rep_cached["lod"]["requests_per_level"],
         },
         "sync": {
@@ -256,6 +259,11 @@ def main(argv=None):
                 "serial_frames_per_s": rep_serial["frames_per_s"],
                 "cached_frames_per_s": rep_cached["frames_per_s"],
                 "deduped": report["deduped"],
+                "cached_renders_per_frame": rep_cached["tiles"]["renders_per_frame"],
+                "tile_cache_hit_rate": rep_cached["cache"]["hit_rate"],
+                "tile_dedup_bytes_saved": rep_cached["cache"]["tiles"][
+                    "dedup_bytes_saved"
+                ],
             },
         )
 

@@ -274,6 +274,58 @@ def make_eval_render(mesh: Mesh, cfg: GSConfig, *, model_axis: str = "model"):
     return jax.jit(fn)
 
 
+def make_tile_row_render(mesh: Mesh, cfg: GSConfig, *, row: int, model_axis: str = "model"):
+    """Distributed eval render of ONE horizontal tile row of one view.
+
+    Returned fn: (params sharded over ``model_axis``, a single Camera) ->
+    (cfg.tile_h, cfg.img_w, 3) image — the pixel rows
+    ``[row*tile_h, (row+1)*tile_h)`` of the full-frame render, **bit-identical**
+    to the same rows of :func:`make_batched_eval_render`'s output. The
+    project -> all_gather -> depth-sort prefix is the full-frame computation
+    verbatim; only the rasterize stage narrows, via the tile binner's
+    ``row_offset`` (tile rectangles and per-tile pixel coordinates come out
+    as the same integers, so binning and compositing see identical inputs
+    per tile). This is the serve-side partial-render primitive: a cache that
+    already holds most of a frame's tiles re-renders only the missing rows.
+
+    ``row`` is static (the Pallas raster kernel specializes on the offset),
+    so each (level-config, row) pair is its own jit trace — a bounded set,
+    levels x tiles_y, paid lazily on first partial hit per row.
+    """
+    bg = jnp.asarray(cfg.bg, jnp.float32)
+    row_offset = int(row) * cfg.tile_h
+
+    def local(params: G.GaussianModel, cam: P.Camera):
+        packed = P.project(params, cam)
+        gathered = jax.lax.all_gather(packed, model_axis, axis=0, tiled=True)
+        pk_sorted, _ = P.sort_by_depth(gathered)
+        img, _ = R.render_packed(
+            pk_sorted,
+            img_h=cfg.tile_h,
+            img_w=cfg.img_w,
+            tile_h=cfg.tile_h,
+            tile_w=cfg.tile_w,
+            k_per_tile=cfg.k_per_tile,
+            bg=bg,
+            backend=cfg.backend,
+            # always flat: a strip cannot reproduce the full frame's "hier"
+            # superblock geometry, and hier is defined (and tested) to equal
+            # flat binning — flat is the deterministic common denominator
+            binning="flat",
+            row_offset=row_offset,
+        )
+        return img
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(G.GaussianModel(*([PS(model_axis)] * 5)), P.Camera(*([PS()] * 5))),
+        out_specs=PS(),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
 def make_batched_eval_render(
     mesh: Mesh,
     cfg: GSConfig,

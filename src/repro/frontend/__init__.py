@@ -19,7 +19,13 @@ from repro.frontend.client import (
     RemoteRenderError,
     ShedError,
 )
-from repro.frontend.encode import FrameDecoder, FrameEncoder, quantize_rgb8
+from repro.frontend.encode import (
+    CodecError,
+    FrameDecoder,
+    FrameEncoder,
+    quantize_rgb8,
+    tile_grid,
+)
 from repro.frontend.gateway import Gateway, GatewayThread
 from repro.frontend.protocol import (
     ProtocolError,
@@ -39,6 +45,7 @@ from repro.frontend.sessions import (
 
 __all__ = [
     "AsyncFrontendClient",
+    "CodecError",
     "FrameDecoder",
     "FrameEncoder",
     "FrontendClient",
@@ -57,5 +64,6 @@ __all__ = [
     "pack_message",
     "quantize_rgb8",
     "read_message",
+    "tile_grid",
     "write_message",
 ]

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core.projection import Camera
 from repro.frontend import protocol as proto
-from repro.frontend.encode import FrameDecoder
+from repro.frontend.encode import ENCODINGS, FrameDecoder
 
 
 class ShedError(RuntimeError):
@@ -51,13 +51,25 @@ class AsyncFrontendClient:
     # ------------------------------------------------------------- lifecycle
     async def connect(self) -> dict:
         self._reader, self._writer = await asyncio.open_connection(self.host, self.port)
-        await proto.write_message(self._writer, {"type": proto.HELLO})
+        # offer the full application protocol + every encoding the decoder
+        # speaks; the gateway answers with what it will actually use (a v1
+        # gateway ignores the extra fields — same fallback, from its side)
+        await proto.write_message(self._writer, {
+            "type": proto.HELLO,
+            "protocol": proto.PROTOCOL,
+            "encodings": list(ENCODINGS),
+        })
         msg = await proto.read_message(self._reader)
         if msg is None or msg[0].get("type") != proto.HELLO_OK:
             raise proto.ProtocolError(f"handshake failed: {msg and msg[0]}")
         self.hello = msg[0]
         self._reader_task = asyncio.ensure_future(self._read_loop())
         return self.hello
+
+    @property
+    def protocol(self) -> int:
+        """Negotiated application protocol (1 until connected)."""
+        return int((self.hello or {}).get("protocol", 1))
 
     async def close(self) -> None:
         if self._writer is not None:

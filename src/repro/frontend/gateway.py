@@ -93,6 +93,7 @@ class Gateway:
         self.dropped_writes = 0
         self.delivery_errors = 0
         self.engine_errors = 0
+        self.delta_resets = 0  # stream invalidations -> forced keyframes
         self.bytes_out = 0
         self.waves = 0
         self.connections_total = 0
@@ -169,7 +170,12 @@ class Gateway:
 
     # ------------------------------------------------------------ connections
     async def _handle_conn(self, reader: asyncio.StreamReader, writer: asyncio.StreamWriter):
-        session = Session(queue_limit=self.queue_limit, delta_encoding=self.delta_encoding)
+        cfg = self.manager.cfg
+        session = Session(
+            queue_limit=self.queue_limit,
+            delta_encoding=self.delta_encoding,
+            tile=(cfg.tile_h, cfg.tile_w),
+        )
         self._sessions[session.session_id] = session
         self._writers[session.session_id] = writer
         self._conn_tasks.add(asyncio.current_task())
@@ -205,9 +211,16 @@ class Gateway:
         mtype = header.get("type")
         seq = header.get("seq")
         if mtype == proto.HELLO:
+            # application-protocol negotiation: a v1 hello (no protocol
+            # field / no tiles8 offer) keeps the v1 zdelta8 wire format
+            negotiated = session.negotiate(
+                header.get("protocol", 1), header.get("encodings")
+            )
             await self._send(session, {
                 "type": proto.HELLO_OK,
-                "protocol": proto.VERSION,
+                "protocol": negotiated,
+                "encodings": session.encoder.offered(),
+                "tile": list(session.tile),
                 "streams": self.manager.describe(),
                 "img_h": self.manager.cfg.img_h,
                 "img_w": self.manager.cfg.img_w,
@@ -365,6 +378,14 @@ class Gateway:
 
     async def _deliver_inner(self, results: list) -> None:
         loop = asyncio.get_running_loop()
+        # a cache invalidation (model hot-swap, dirty-row drop) marks its
+        # stream dirty: reset every session's delta chain for it BEFORE this
+        # wave encodes, so the first post-update frame ships as a keyframe
+        # rather than extending a chain rooted in superseded content
+        for sid in self.manager.take_dirty():
+            self.delta_resets += 1
+            for s in list(self._sessions.values()):
+                s.encoder.reset(sid)
         t1 = time.perf_counter()
         # One executor hop encodes the WHOLE wave (per-frame hops cost a
         # thread wakeup + loop wakeup each — measurable at localhost rates).
@@ -477,6 +498,7 @@ class Gateway:
                 "dropped_writes": self.dropped_writes,
                 "delivery_errors": self.delivery_errors,
                 "engine_errors": self.engine_errors,
+                "delta_resets": self.delta_resets,
                 "bytes_out": self.bytes_out,
                 "waves": self.waves,
                 "queue_limit": self.queue_limit,

@@ -27,6 +27,16 @@ Message types (header["type"]):
 Requests carry a client-chosen ``seq``; every response names the ``seq`` it
 answers, so one connection can hold many requests in flight (the gateway
 sheds overload per-session by answering queued seqs with ``error/shed``).
+
+**Versioning.** Two numbers, two jobs. ``VERSION`` (the prefix byte) is the
+*framing* version — how bytes become messages — and only changes if the
+prefix layout does. ``PROTOCOL`` is the *application* version, negotiated in
+``hello``: the client sends ``{"protocol": <its max>, "encodings": [...]}``,
+the gateway answers ``hello_ok`` with ``min(client, server)`` and the frame
+encodings it will actually use. Protocol v2 adds the ``tiles8``
+changed-tile frame encoding (see ``encode.py``); a v1 peer (or a hello with
+no ``protocol`` field) falls back to the v1 ``zdelta8``/``rgb8`` wire
+format, so old clients keep working against new gateways and vice versa.
 """
 from __future__ import annotations
 
@@ -39,7 +49,8 @@ import numpy as np
 from repro.core.projection import Camera
 
 MAGIC = b"GS"
-VERSION = 1
+VERSION = 1    # wire FRAMING version (prefix byte): layout of the prefix
+PROTOCOL = 2   # application version, negotiated in hello (v2: tiles8 frames)
 
 # magic(2) version(1) reserved(1) header_len(u32) payload_len(u32), big-endian
 _PREFIX = struct.Struct(">2sBBII")

@@ -23,13 +23,15 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import threading
 import time
 from typing import Iterable, Mapping
 
 from repro.core import gaussians as G
 from repro.core.config import GSConfig
 from repro.core.projection import Camera
-from repro.frontend.encode import FrameEncoder
+from repro.frontend import protocol as proto
+from repro.frontend.encode import RAW8, TILES8, ZDELTA8, FrameEncoder
 from repro.serve_gs import RenderServer
 
 STREAM_STRIDE = 1 << 20  # global-timeline block reserved per stream
@@ -60,6 +62,12 @@ class SessionManager:
         self.server: RenderServer | None = None
         self.streams: dict[str, StreamInfo] = {}
         self._next_base = 0
+        # streams whose cached content was invalidated since the last
+        # take_dirty(): the gateway resets their wire delta chains, so the
+        # next frame after a model update is a fresh keyframe. Set on the
+        # render-executor thread, drained on the loop thread -> locked.
+        self._dirty_streams: set[str] = set()
+        self._dirty_lock = threading.Lock()
 
     # ------------------------------------------------------------- register
     def _register(
@@ -78,6 +86,7 @@ class SessionManager:
                 self.server = RenderServer(
                     params, self.cfg, timestep=base + int(t), **self._server_kw
                 )
+                self.server.add_invalidation_listener(self._on_invalidate)
             else:
                 self.server.add_timestep(base + int(t), params)
         info = StreamInfo(stream_id, kind, base, tuple(locals_), frozenset(locals_))
@@ -116,6 +125,33 @@ class SessionManager:
     def describe(self) -> dict:
         """Wire-facing listing for ``hello_ok``."""
         return {sid: info.describe() for sid, info in self.streams.items()}
+
+    # --------------------------------------------------------- invalidation
+    def _on_invalidate(self, global_ts: int) -> None:
+        """Server invalidation listener: map the global timeline position
+        back to its stream and mark its wire delta chains dirty."""
+        for sid, info in self.streams.items():
+            if info.base <= global_ts < info.base + STREAM_STRIDE:
+                with self._dirty_lock:
+                    self._dirty_streams.add(sid)
+                return
+
+    def take_dirty(self) -> set[str]:
+        """Pop the streams invalidated since the last call (gateway loop)."""
+        with self._dirty_lock:
+            dirty, self._dirty_streams = self._dirty_streams, set()
+        return dirty
+
+    def invalidate(self, stream_id: str, timestep: int = 0, *, rows=None) -> int:
+        """Invalidate a stream timestep's cached frames (all, or only the
+        tile rows in ``rows``). The serving engine is single-threaded by
+        contract — from a running gateway, route this through
+        ``Gateway.run_on_engine`` like any other engine maintenance."""
+        info = self.streams.get(stream_id)
+        if info is None:
+            raise KeyError(f"unknown stream {stream_id!r} (have {sorted(self.streams)})")
+        assert self.server is not None
+        return self.server.invalidate(info.base + int(timestep), rows=rows)
 
     # ------------------------------------------------------------ lifecycle
     def warmup(self) -> float:
@@ -172,11 +208,20 @@ class PendingRender:
 class Session:
     """One client connection's server-side state (queue, shed, encoder)."""
 
-    def __init__(self, *, queue_limit: int, delta_encoding: bool = True):
+    def __init__(
+        self,
+        *,
+        queue_limit: int,
+        delta_encoding: bool = True,
+        tile: tuple[int, int] = (16, 16),
+    ):
         assert queue_limit >= 1, queue_limit
         self.session_id = next(_session_ids)
         self.queue_limit = queue_limit
         self.queue: collections.deque[PendingRender] = collections.deque()
+        self.delta_encoding = delta_encoding
+        self.tile = (int(tile[0]), int(tile[1]))
+        self.protocol = 1  # until the hello negotiates higher
         self.encoder = FrameEncoder(delta=delta_encoding)
         self.shed = 0
         self.admitted = 0
@@ -214,12 +259,31 @@ class Session:
         self.admitted += 1
         return victim
 
+    def negotiate(self, protocol, encodings: Iterable[str] | None) -> int:
+        """Pick the session's application protocol + frame encoding from the
+        peer's hello. A v1 hello (no ``protocol`` field, or no ``tiles8`` in
+        its encodings) keeps the v1 zdelta8/rgb8 wire format; a v2 peer that
+        offers ``tiles8`` gets changed-tile streaming. Replaces the encoder
+        (no frame has been sent yet — hello is the first exchange)."""
+        try:
+            self.protocol = max(1, min(int(protocol), proto.PROTOCOL))
+        except (TypeError, ValueError):
+            self.protocol = 1
+        offered = set(encodings) if encodings is not None else {RAW8, ZDELTA8}
+        tiles = self.delta_encoding and self.protocol >= 2 and TILES8 in offered
+        # never emit an encoding the peer did not offer: a raw-only decoder
+        # (encodings=["rgb8"]) must get raw keyframes, not zdelta8
+        delta = self.delta_encoding and (tiles or ZDELTA8 in offered)
+        self.encoder = FrameEncoder(delta=delta, tiles=tiles, tile=self.tile)
+        return self.protocol
+
     def take(self, n: int) -> list[PendingRender]:
         """Pop up to ``n`` queued requests (FIFO) for a dispatch wave."""
         return [self.queue.popleft() for _ in range(min(n, len(self.queue)))]
 
     def stats(self) -> dict:
         return {
+            "protocol": self.protocol,
             "admitted": self.admitted,
             "frames_sent": self.frames_sent,
             "shed": self.shed,

@@ -88,7 +88,10 @@ def main(argv=None):
     ap.add_argument("--levels", type=int, default=3)
     ap.add_argument("--keep-ratio", type=float, default=0.5)
     ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--cache", type=int, default=512)
+    ap.add_argument("--cache", type=int, default=512,
+                    help="cache capacity in frame-equivalents (byte budget)")
+    ap.add_argument("--frame-cache", action="store_true",
+                    help="whole-frame cache baseline (no tile granularity)")
     ap.add_argument("--pipeline-depth", type=int, default=2)
     # gateway
     ap.add_argument("--queue-limit", type=int, default=8,
@@ -123,6 +126,7 @@ def main(argv=None):
         keep_ratio=args.keep_ratio,
         max_batch=args.max_batch,
         cache_capacity=args.cache,
+        tile_cache=not args.frame_cache,
         store_frames=False,
         pipeline_depth=args.pipeline_depth,
     )

@@ -65,7 +65,14 @@ def main(argv=None):
         "--pipeline-depth", type=int, default=2,
         help="in-flight micro-batches kept on-device (1 = synchronous dispatch)",
     )
-    ap.add_argument("--cache", type=int, default=512, help="frame cache capacity")
+    ap.add_argument("--cache", type=int, default=512,
+                    help="cache capacity in frame-equivalents (byte budget = "
+                    "N x frame bytes; 0 disables)")
+    ap.add_argument("--cache-bytes", type=int, default=None,
+                    help="cache byte budget directly (overrides --cache)")
+    ap.add_argument("--frame-cache", action="store_true",
+                    help="whole-frame cache baseline (disables the "
+                    "tile-granular cache + partial strip renders)")
     ap.add_argument("--rate", type=float, default=0.0, help="request rounds per second (0 = flat out)")
     ap.add_argument("--report", default=None, help="write the JSON report here too")
     args = ap.parse_args(argv)
@@ -90,6 +97,8 @@ def main(argv=None):
         keep_ratio=args.keep_ratio,
         max_batch=args.max_batch,
         cache_capacity=args.cache,
+        cache_bytes=args.cache_bytes,
+        tile_cache=not args.frame_cache,
         store_frames=False,
         pipeline_depth=args.pipeline_depth,
     ) as server:

@@ -9,7 +9,7 @@ CLI driver and ``benchmarks/serve_throughput.py`` for the throughput
 methodology.
 """
 from repro.serve_gs.batcher import MicroBatch, MicroBatcher, RenderRequest, stack_cameras
-from repro.serve_gs.cache import FrameCache, frame_key, quantize_camera
+from repro.serve_gs.cache import FrameCache, frame_key, quantize_camera, tile_key
 from repro.serve_gs.client import OrbitClient, make_clients, run_load
 from repro.serve_gs.lod import (
     LODPyramid,
@@ -41,4 +41,5 @@ __all__ = [
     "screen_coverage",
     "select_level",
     "stack_cameras",
+    "tile_key",
 ]

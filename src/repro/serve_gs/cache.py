@@ -1,15 +1,27 @@
-"""LRU frame cache keyed by quantized camera pose.
+"""Tile-granular LRU frame cache keyed by quantized camera pose.
 
 Post hoc exploration revisits poses constantly (orbit playback, multiple
 clients on the same trajectory, scrubbing back and forth). Exact float poses
 never collide, so keys quantize the extrinsics/intrinsics: poses within the
 quantum render identically for all practical purposes and share one entry.
-The cache also keys on the LOD level — the same pose at a different level is
+The cache also keys on the LOD level, the timeline position, and the render
+resolution — the same pose at a different level, timestep, or output size is
 a different frame.
 
-**Copy-on-write contract.** One frame buffer is shared by the cache, the
-server's retirement buffer, and every (possibly deduped) waiter's
-``FrameFuture`` — a second copy per reader would double serving memory for
+**Tile granularity.** The serving unit stored here is a *tile* (the
+rasterizer's ``tile_h x tile_w`` screen tile), not a whole frame: the server
+appends a tile index to the frame key (:func:`tile_key`) and stores the
+frame as its grid of tiles. Tiles are small and numerous, so capacity is a
+**byte budget** rather than an entry count, and identical tile *content* is
+stored once (content-addressed blobs with refcounts): the many background
+tiles shared by every pose of an orbit cost one buffer, which is what lets a
+tile cache hold far more poses than a whole-frame cache of the same byte
+size. Whole-frame use (one entry per key, ``tile_cache=False`` servers) is
+the degenerate case of the same structure.
+
+**Copy-on-write contract.** One buffer is shared by the cache, the server's
+retirement buffer, every deduplicated key, and every waiter's
+``FrameFuture`` — a second copy per reader would multiply serving memory for
 nothing. ``put`` therefore marks the array read-only
 (``arr.setflags(write=False)``) and ``get`` hands the same read-only array to
 every hit: a client that wants to draw on its frame must ``.copy()`` it
@@ -19,6 +31,7 @@ corrupting every other reader and all later cache hits.
 from __future__ import annotations
 
 import collections
+import hashlib
 
 import numpy as np
 
@@ -50,60 +63,175 @@ def frame_key(
     cam: Camera,
     level: int,
     *,
+    height: int,
+    width: int,
     timestep: int = 0,
     pose_quantum: float = 1e-3,
     focal_quantum: float = 0.5,
 ) -> tuple:
-    """Cache key for a frame: the same pose at another LOD level *or another
-    timeline position* is a different frame (time-scrubbing correctness)."""
-    return (int(timestep), int(level)) + quantize_camera(
+    """Cache key for a frame: the same pose at another LOD level, *another
+    timeline position*, or **another output resolution** is a different
+    frame. Resolution is part of the key because the camera alone does not
+    carry it — two requests at one quantized pose but different render sizes
+    must never share an entry (a hit would return a wrong-size frame)."""
+    return (int(timestep), int(level), int(height), int(width)) + quantize_camera(
         cam, pose_quantum=pose_quantum, focal_quantum=focal_quantum
     )
 
 
-class FrameCache:
-    """Bounded LRU mapping frame keys -> rendered frames, with hit metrics."""
+ASSEMBLED = -1  # sentinel tile index: the frame assembled from its tiles
 
-    def __init__(self, capacity: int = 512):
-        assert capacity >= 0
+
+def tile_key(key: tuple, tile_index: int) -> tuple:
+    """Key of one screen tile of the frame ``key`` (flat row-major index).
+    ``ASSEMBLED`` keys the whole stitched frame — cached alongside its tiles
+    so repeated full hits are zero-copy, governed by the same byte budget,
+    LRU order, and drop predicates as everything else."""
+    return key + (int(tile_index),)
+
+
+class _Blob:
+    """One refcounted content-addressed buffer (shared across equal tiles)."""
+
+    __slots__ = ("data", "digest", "refs")
+
+    def __init__(self, data: np.ndarray, digest: bytes):
+        self.data = data
+        self.digest = digest
+        self.refs = 0
+
+
+def _digest(arr: np.ndarray) -> bytes:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((arr.shape, arr.dtype.str)).encode())
+    h.update(arr.tobytes())
+    return h.digest()
+
+
+class FrameCache:
+    """Bounded LRU mapping frame/tile keys -> arrays, with byte budgeting,
+    content dedup, and hit/eviction/invalidation metrics.
+
+    ``capacity`` bounds the *entry count* (legacy whole-frame semantics;
+    default 512 so a bare ``FrameCache()`` stays bounded; None = unbounded),
+    ``capacity_bytes`` bounds the total bytes of *unique* buffers held (the
+    tile-serving budget — pass ``capacity=None`` with it, as the server
+    does, since tile entries are far more numerous than frames). Either at 0
+    disables the cache entirely. Eviction is LRU by key; a buffer's bytes are
+    released only when its last referencing key is gone.
+    """
+
+    def __init__(
+        self,
+        capacity: int | None = 512,
+        *,
+        capacity_bytes: int | None = None,
+        dedup: bool = True,
+    ):
+        assert capacity is None or capacity >= 0
+        assert capacity_bytes is None or capacity_bytes >= 0
         self.capacity = capacity
-        self._store: collections.OrderedDict[tuple, np.ndarray] = collections.OrderedDict()
+        self.capacity_bytes = capacity_bytes
+        self.dedup = dedup
+        self._store: collections.OrderedDict[tuple, _Blob] = collections.OrderedDict()
+        self._blobs: dict[bytes, _Blob] = {}
+        self._bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.dropped = 0          # entries removed by drop() (invalidation)
+        self.dedup_shared = 0     # puts that reused an existing buffer
+        self.dedup_bytes_saved = 0
 
     def __len__(self) -> int:
         return len(self._store)
 
+    @property
+    def bytes(self) -> int:
+        """Total bytes of unique buffers currently held."""
+        return self._bytes
+
+    @property
+    def disabled(self) -> bool:
+        return self.capacity == 0 or self.capacity_bytes == 0
+
     def get(self, key: tuple) -> np.ndarray | None:
-        frame = self._store.get(key)
-        if frame is None:
+        blob = self._store.get(key)
+        if blob is None:
             self.misses += 1
             return None
         self._store.move_to_end(key)
         self.hits += 1
-        return frame
+        return blob.data
 
-    def put(self, key: tuple, frame: np.ndarray) -> None:
-        """Insert a frame. The cache owns the buffer from here on: it is
+    # ------------------------------------------------------------- refcounts
+    def _incref(self, blob: _Blob) -> None:
+        if blob.refs == 0:
+            self._bytes += blob.data.nbytes
+            if blob.digest is not None:
+                self._blobs[blob.digest] = blob
+        blob.refs += 1
+
+    def _decref(self, blob: _Blob) -> None:
+        blob.refs -= 1
+        if blob.refs == 0:
+            self._bytes -= blob.data.nbytes
+            if blob.digest is not None:
+                self._blobs.pop(blob.digest, None)
+
+    def _remove(self, key: tuple) -> None:
+        self._decref(self._store.pop(key))
+
+    def put(self, key: tuple, frame: np.ndarray, *, dedup: bool | None = None) -> None:
+        """Insert an array. The cache owns the buffer from here on: it is
         marked read-only (see the module docstring's copy-on-write contract),
-        so callers must not hold a writable alias."""
-        if self.capacity == 0:
+        so callers must not hold a writable alias. Identical content (same
+        shape + bytes) already in the cache is shared, not stored twice;
+        ``dedup=False`` skips the content hash for entries that essentially
+        never collide (whole assembled frames)."""
+        if self.disabled:
             return
+        if not frame.flags.c_contiguous:
+            frame = np.ascontiguousarray(frame)
+        elif frame.base is not None:
+            # a contiguous VIEW (e.g. a full-width tile row slice) would pin
+            # its whole parent buffer while the budget counts only the slice
+            frame = frame.copy()
         frame.setflags(write=False)
-        if key in self._store:
-            self._store.move_to_end(key)
-        self._store[key] = frame
-        while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
+        dedup = self.dedup if dedup is None else dedup
+        digest = _digest(frame) if dedup else None
+        blob = self._blobs.get(digest) if digest is not None else None
+        if blob is not None:
+            self.dedup_shared += 1
+            self.dedup_bytes_saved += frame.nbytes
+        else:
+            blob = _Blob(frame, digest)
+        old = self._store.get(key)
+        if old is not None:
+            if old is blob:
+                self._store.move_to_end(key)
+                return
+            self._remove(key)
+        self._incref(blob)
+        self._store[key] = blob
+        while (self.capacity is not None and len(self._store) > self.capacity) or (
+            self.capacity_bytes is not None and self._bytes > self.capacity_bytes
+        ):
+            victim, vblob = self._store.popitem(last=False)
+            self._decref(vblob)
             self.evictions += 1
+            if victim == key:  # a single entry larger than the whole budget
+                break
 
     def drop(self, predicate) -> int:
-        """Invalidate every entry whose key matches ``predicate``; returns the
-        count dropped (e.g. all frames of a replaced timeline timestep)."""
+        """Invalidate every entry whose key matches ``predicate``; returns
+        the count dropped (e.g. all tiles of a replaced timeline timestep, or
+        only the tiles of its dirty rows). Unlike eviction this is an
+        explicit correctness action, accounted separately (``dropped``)."""
         keys = [k for k in self._store if predicate(k)]
         for k in keys:
-            del self._store[k]
+            self._remove(k)
+        self.dropped += len(keys)
         return len(keys)
 
     @property
@@ -114,9 +242,22 @@ class FrameCache:
     def stats(self) -> dict:
         return {
             "size": len(self._store),
+            "bytes": self._bytes,
             "capacity": self.capacity,
+            "capacity_bytes": self.capacity_bytes,
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "dropped": self.dropped,
             "hit_rate": round(self.hit_rate, 4),
+            "unique_buffers": sum(1 for _ in self._iter_unique()),
+            "dedup_shared": self.dedup_shared,
+            "dedup_bytes_saved": self.dedup_bytes_saved,
         }
+
+    def _iter_unique(self):
+        seen = set()
+        for blob in self._store.values():
+            if id(blob) not in seen:
+                seen.add(id(blob))
+                yield blob

@@ -23,6 +23,19 @@ the new request to the existing future instead of rendering twice (the
 cross-request dedup the cache alone cannot provide — the first render has not
 landed yet, so the cache misses).
 
+**Tile-granular serving.** With ``tile_cache=True`` (the default) the frame
+is the unit of *assembly*, not the unit of work: retired frames are stored in
+the cache as their grid of rasterizer tiles (content-deduplicated, byte
+budgeted — see ``cache.py``), ``submit`` probes the tile grid, and a pose
+whose tiles are only *partially* cached renders **only the missing tile
+rows** (``make_tile_row_render`` strips, bit-identical to the same rows of
+the full-frame render) before assembling the frame. Partial hits arise from
+byte-budget eviction and — the paper's in situ story — from *partial
+invalidation*: ``add_timestep(..., dirty_rows=...)`` / ``invalidate`` drop
+only the screen rows a model update touched, so revisiting a pose after a
+localized simulation update re-renders a few rows instead of the frame.
+``tile_cache=False`` is the whole-frame baseline, preserved bit-for-bit.
+
 The server holds a *timeline*: timestep -> (LOD pyramid, device params).
 Static scenes are the one-entry special case (timestep 0, the default).
 Streaming reconstructions (``repro.insitu``) register one model per simulation
@@ -46,7 +59,7 @@ from jax.sharding import NamedSharding, PartitionSpec as PS
 from repro.core import gaussians as G
 from repro.core.config import GSConfig
 from repro.core.projection import Camera
-from repro.core.train import make_batched_eval_render
+from repro.core.train import make_batched_eval_render, make_tile_row_render
 from repro.serve_gs.batcher import (
     MicroBatch,
     MicroBatcher,
@@ -54,7 +67,7 @@ from repro.serve_gs.batcher import (
     default_buckets,
     stack_cameras,
 )
-from repro.serve_gs.cache import FrameCache, frame_key
+from repro.serve_gs.cache import ASSEMBLED, FrameCache, frame_key, tile_key
 from repro.serve_gs.lod import LODPyramid, build_lod_pyramid, front_camera, select_level
 
 
@@ -130,6 +143,19 @@ class _InFlight:
     t_dispatch: float
 
 
+@dataclasses.dataclass
+class _PartialJob:
+    """One partially-cached frame awaiting its missing tile rows.
+
+    ``tiles`` is the frame's full tile grid (row-major flat); ``None`` slots
+    are the tiles a strip render must fill. The job pins its cached tiles, so
+    later eviction cannot take them back out from under the assembly."""
+
+    req: RenderRequest
+    fut: "FrameFuture"
+    tiles: list
+
+
 class TimestepModels(NamedTuple):
     """One timeline entry: the pyramid and its device-resident levels."""
 
@@ -151,6 +177,8 @@ class RenderServer:
         max_batch: int = 8,
         buckets: tuple[int, ...] | None = None,
         cache_capacity: int = 512,
+        cache_bytes: int | None = None,
+        tile_cache: bool = True,
         pose_quantum: float = 1e-3,
         store_frames: bool = True,
         frames_capacity: int = 256,
@@ -166,6 +194,19 @@ class RenderServer:
         self.pipeline_depth = int(pipeline_depth)
         self.n_levels = n_levels
         self.keep_ratio = keep_ratio
+
+        # ---- tile geometry (the rasterizer's tiling, reused as cache grid)
+        self.tile_cache = bool(tile_cache)
+        self.tile_h, self.tile_w = int(cfg.tile_h), int(cfg.tile_w)
+        if self.tile_cache:
+            assert cfg.img_h % self.tile_h == 0 and cfg.img_w % self.tile_w == 0, (
+                "tile-granular caching needs the image to tile evenly "
+                f"({cfg.img_h}x{cfg.img_w} vs {self.tile_h}x{self.tile_w}); "
+                "pass tile_cache=False for ragged configs"
+            )
+        self.tiles_y = cfg.img_h // self.tile_h
+        self.tiles_x = cfg.img_w // self.tile_w
+        self.n_tiles = self.tiles_y * self.tiles_x
 
         # Micro-batches shard over the mesh's data axis, so every bucket must
         # be a multiple of it: a d-device data axis renders a bucket-d batch
@@ -199,7 +240,25 @@ class RenderServer:
         self.add_timestep(timestep, params)
 
         self.batcher = MicroBatcher(max_batch=max_batch, buckets=buckets)
-        self.cache = FrameCache(cache_capacity)
+        # Capacity is a byte budget: tile entries are far smaller and more
+        # numerous than frames, so an entry count is meaningless across
+        # granularities. ``cache_capacity`` (frames) preserves the historical
+        # "N cached poses" meaning: a tile-cached pose costs up to TWO frame
+        # equivalents (its tiles + the zero-copy stitched frame), so the
+        # conversion doubles in tile mode; content dedup claws much of the
+        # tile half back. ``cache_bytes`` sets the budget directly.
+        # Either at 0 disables caching.
+        frame_nbytes = cfg.img_h * cfg.img_w * 3 * 4  # float32 RGB
+        per_pose = frame_nbytes * (2 if self.tile_cache else 1)
+        self.cache = FrameCache(
+            capacity=None,  # the byte budget is the bound, not entry count
+            capacity_bytes=int(cache_bytes) if cache_bytes is not None
+            else int(cache_capacity) * per_pose,
+            # content dedup pays at tile granularity (shared background
+            # tiles); whole frames essentially never collide, so the
+            # baseline skips the per-put hash entirely
+            dedup=self.tile_cache,
+        )
         # bounded retirement buffer of recently served frames (request_id ->
         # frame); a sustained-load server must not pin every frame ever served
         self.frames: collections.OrderedDict[int, np.ndarray] = collections.OrderedDict()
@@ -207,6 +266,9 @@ class RenderServer:
         # ---- pipeline state
         self._ring: collections.deque[_InFlight] = collections.deque()
         self._pending: dict[tuple, FrameFuture] = {}  # in-flight key -> future
+        self._partial: collections.deque[_PartialJob] = collections.deque()
+        self._strip_renders: dict[tuple[int, int], object] = {}  # (level, row)
+        self._invalidation_listeners: list = []
         self.deduped = 0
         self._closed = False
 
@@ -224,6 +286,13 @@ class RenderServer:
         self._t_first: float | None = None
         self._t_last: float | None = None
         self.completed = 0
+        # ---- tile-path metrics (frame-granular; the cache's own hit/miss
+        # counters are per-TILE once tile_cache is on)
+        self.full_hits = 0       # every tile cached: resolved at submit
+        self.partial_hits = 0    # some tiles cached: only missing rows render
+        self.frame_misses = 0    # no usable tiles: full micro-batched render
+        self.rows_rendered = 0   # tile rows rendered by the partial path
+        self.render_rows = 0     # total tile rows rendered for real requests
 
     # first-entry aliases — the pre-timeline (static scene) public surface;
     # properties so they track add_timestep() re-registering the first entry
@@ -245,22 +314,37 @@ class RenderServer:
             return -1
 
     @property
+    def strip_traces(self) -> int:
+        """Compiled tile-row render variants (the partial-hit path); kept
+        separate from ``n_traces`` because strips are built lazily per
+        (level, row) and are not part of the steady-state full-frame budget."""
+        return len(self._strip_renders)
+
+    @property
     def in_flight(self) -> int:
         """Dispatched-but-not-retired micro-batches currently on the ring."""
         return len(self._ring)
 
     # --------------------------------------------------------------- timeline
-    def add_timestep(self, timestep: int, params: G.GaussianModel) -> TimestepModels:
+    def add_timestep(
+        self, timestep: int, params: G.GaussianModel, *, dirty_rows=None
+    ) -> TimestepModels:
         """Register a model for one timeline position. Re-registering an
         existing timestep replaces the model AND invalidates its cached
         frames (stale frames must not outlive the model that rendered them).
+
+        ``dirty_rows`` (tile-cache servers only) is the in situ fast path: an
+        iterable of screen tile-row indices that the model update can affect.
+        Only those rows' cached tiles are dropped — every cached pose keeps
+        its clean tiles and the next request partial-renders just the dirty
+        rows. The CALLER asserts the contract: for every cached pose, the new
+        model must render bit-identically to the old one outside
+        ``dirty_rows`` (e.g. the changed Gaussians' projected footprints,
+        padded by their radii, stay inside those rows for every served pose).
         """
         cache = getattr(self, "cache", None)  # absent during __init__'s first entry
         if cache is not None and int(timestep) in self._timeline:
-            # retire anything in flight first: an old-model batch must not
-            # land in the cache after its frames were invalidated
-            self.flush()
-            cache.drop(lambda k: k[0] == int(timestep))
+            self.invalidate(timestep, rows=dirty_rows)
         pyramid = build_lod_pyramid(
             params,
             n_levels=self.n_levels,
@@ -276,6 +360,36 @@ class RenderServer:
 
     def timesteps(self) -> list[int]:
         return sorted(self._timeline)
+
+    # ----------------------------------------------------------- invalidation
+    def add_invalidation_listener(self, cb) -> None:
+        """Register ``cb(timestep)`` to fire after any cache invalidation of
+        that timeline position (model replacement or explicit ``invalidate``).
+        The frontend uses this to reset per-stream delta-encode chains, so a
+        content change forces a fresh keyframe on the wire."""
+        self._invalidation_listeners.append(cb)
+
+    def invalidate(self, timestep: int, *, rows=None) -> int:
+        """Drop cached frames of ``timestep`` — all of them, or (tile-cache
+        servers) only the tiles in screen tile-rows ``rows``. Returns the
+        number of cache entries dropped. In-flight and partially-assembled
+        work is drained first, so a stale render can never land after its
+        invalidation."""
+        self.flush()  # old-model batches/partials must not outlive the drop
+        ts = int(timestep)
+        if rows is None or not self.tile_cache:
+            n = self.cache.drop(lambda k: k[0] == ts)
+        else:
+            # dirty tiles go, and so does every ASSEMBLED frame of the
+            # timestep — a stitched frame contains its dirty rows
+            rset = {int(r) for r in rows}
+            n = self.cache.drop(
+                lambda k: k[0] == ts
+                and (k[-1] == ASSEMBLED or (k[-1] // self.tiles_x) in rset)
+            )
+        for cb in self._invalidation_listeners:
+            cb(ts)
+        return n
 
     def _entry(self, timestep: int) -> TimestepModels:
         try:
@@ -327,7 +441,10 @@ class RenderServer:
             self._t_first = t
         entry = self._entry(timestep)
         level = select_level(entry.pyramid, cam, img_w=self.cfg.img_w)
-        key = frame_key(cam, level, timestep=timestep, pose_quantum=self.pose_quantum)
+        key = frame_key(
+            cam, level, height=self.cfg.img_h, width=self.cfg.img_w,
+            timestep=timestep, pose_quantum=self.pose_quantum,
+        )
         req = RenderRequest(
             cam=cam, level=level, t_submit=t, client_id=client_id, cache_key=key,
             timestep=int(timestep),
@@ -335,11 +452,29 @@ class RenderServer:
         self._level_requests[level] += 1
         self._timestep_requests[int(timestep)] = self._timestep_requests.get(int(timestep), 0) + 1
 
-        frame = self.cache.get(key)
-        if frame is not None:
-            fut = FrameFuture(self, key, req)
-            fut._resolve(frame)
-            return fut
+        tiles = None
+        if self.tile_cache and not self.cache.disabled:
+            # fast path: the stitched frame itself is cached (zero-copy hit)
+            frame = self.cache.get(tile_key(key, ASSEMBLED))
+            if frame is not None:
+                self.full_hits += 1
+                fut = FrameFuture(self, key, req)
+                fut._resolve(frame)
+                return fut
+            tiles = [self.cache.get(tile_key(key, ti)) for ti in range(self.n_tiles)]
+            if all(t is not None for t in tiles):  # full hit: assemble once
+                self.full_hits += 1
+                frame = self._assemble(tiles)
+                self.cache.put(tile_key(key, ASSEMBLED), frame, dedup=False)
+                fut = FrameFuture(self, key, req)
+                fut._resolve(frame)
+                return fut
+        else:
+            frame = self.cache.get(key)
+            if frame is not None:
+                fut = FrameFuture(self, key, req)
+                fut._resolve(frame)
+                return fut
         fut = self._pending.get(key)
         if fut is not None:  # identical pose already in flight: render once
             fut._attach(req)
@@ -348,8 +483,117 @@ class RenderServer:
         fut = FrameFuture(self, key, req)
         req.future = fut
         self._pending[key] = fut
-        self.batcher.submit(req)
+        if tiles is not None and any(t is not None for t in tiles):
+            # partial hit: a dedicated job renders only the missing tile rows
+            self.partial_hits += 1
+            self._partial.append(_PartialJob(req=req, fut=fut, tiles=tiles))
+        else:
+            if self.tile_cache:
+                self.frame_misses += 1
+            self.batcher.submit(req)
         return fut
+
+    # ------------------------------------------------------------- tile path
+    def _assemble(self, tiles: list) -> np.ndarray:
+        """Stitch the row-major tile grid back into one read-only frame.
+
+        Pure memory movement over the very floats the render produced, so the
+        assembled frame is bit-identical to the full-frame render it was
+        split from (or would have been split from)."""
+        th, tw = self.tile_h, self.tile_w
+        frame = np.ascontiguousarray(
+            np.stack(tiles)
+            .reshape(self.tiles_y, self.tiles_x, th, tw, 3)
+            .transpose(0, 2, 1, 3, 4)
+            .reshape(self.cfg.img_h, self.cfg.img_w, 3)
+        )
+        frame.setflags(write=False)
+        return frame
+
+    def _cache_put_frame(self, key: tuple, frame: np.ndarray) -> None:
+        """Store a retired frame: whole (baseline) or split into tiles."""
+        if not self.tile_cache:
+            self.cache.put(key, frame)
+            return
+        if self.cache.disabled:
+            return
+        th, tw = self.tile_h, self.tile_w
+        for ti in range(self.n_tiles):
+            ty, tx = divmod(ti, self.tiles_x)
+            self.cache.put(
+                tile_key(key, ti),
+                frame[ty * th : (ty + 1) * th, tx * tw : (tx + 1) * tw],
+            )
+        # and the stitched frame itself: later full hits are zero-copy (no
+        # extra buffer here — this IS the retired frame, shared read-only)
+        self.cache.put(tile_key(key, ASSEMBLED), frame, dedup=False)
+
+    def _strip_fn(self, level: int, row: int):
+        """The jitted single-view tile-row render for (level, row), built
+        lazily (a bounded set: levels x tiles_y traces)."""
+        fn = self._strip_renders.get((level, row))
+        if fn is None:
+            fn = make_tile_row_render(self.mesh, self._level_cfgs[level], row=row)
+            self._strip_renders[(level, row)] = fn
+        return fn
+
+    def warmup_tiles(self, *, levels=None, rows=None, timesteps=None) -> float:
+        """Pre-compile tile-row render variants (the partial-hit path);
+        returns seconds. Lazy by default because most serving never partials
+        on most (level, row) pairs — benchmarks and latency-sensitive insitu
+        deployments warm the rows they expect to invalidate."""
+        assert self.tile_cache, "tile-row renders exist only with tile_cache"
+        t0 = time.perf_counter()
+        for ts in timesteps if timesteps is not None else [self.timesteps()[0]]:
+            entry = self._entry(ts)
+            cam = front_camera(entry.pyramid, img_h=self.cfg.img_h, img_w=self.cfg.img_w)
+            cam_np = jax.tree_util.tree_map(np.asarray, cam)
+            for lvl in levels if levels is not None else range(len(entry.level_params)):
+                for row in rows if rows is not None else range(self.tiles_y):
+                    jax.block_until_ready(
+                        self._strip_fn(lvl, row)(entry.level_params[lvl], cam_np)
+                    )
+        return time.perf_counter() - t0
+
+    def _run_partial(self, job: _PartialJob) -> int:
+        """Render a partial hit's missing tile rows, assemble, resolve."""
+        req = job.req
+        entry = self._entry(req.timestep)
+        cam_np = jax.tree_util.tree_map(np.asarray, req.cam)
+        missing = sorted(
+            {ti // self.tiles_x for ti, t in enumerate(job.tiles) if t is None}
+        )
+        t0 = time.perf_counter()
+        # dispatch every missing row first (jax async dispatch), then block
+        launched = [
+            (r, self._strip_fn(req.level, r)(entry.level_params[req.level], cam_np))
+            for r in missing
+        ]
+        self._dispatch_s += time.perf_counter() - t0
+        for r, dev in launched:
+            strip = np.asarray(jax.block_until_ready(dev))  # (tile_h, W, 3)
+            for tx in range(self.tiles_x):
+                ti = r * self.tiles_x + tx
+                if job.tiles[ti] is None:
+                    tile = np.ascontiguousarray(
+                        strip[:, tx * self.tile_w : (tx + 1) * self.tile_w]
+                    )
+                    tile.setflags(write=False)
+                    self.cache.put(tile_key(req.cache_key, ti), tile)
+                    job.tiles[ti] = tile
+        now = time.perf_counter()
+        self._block_s += now - t0
+        self._render_s += now - max(t0, self._busy_until)
+        self._busy_until = now
+        self.rows_rendered += len(missing)
+        self.render_rows += len(missing)
+        frame = self._assemble(job.tiles)
+        self.cache.put(tile_key(req.cache_key, ASSEMBLED), frame, dedup=False)
+        fut = self._pending.pop(req.cache_key, None)
+        if fut is not None:
+            return fut._resolve(frame)
+        self._complete(req, frame)  # pragma: no cover - defensive
+        return 1
 
     # ------------------------------------------------------------------ serve
     def _dispatch_one(self) -> bool:
@@ -382,10 +626,11 @@ class RenderServer:
         self._render_s += now - max(inf.t_dispatch, self._busy_until)
         self._busy_until = now
         done = 0
+        self.render_rows += self.tiles_y * len(inf.mb.requests)
         for i, req in enumerate(inf.mb.requests):
             frame = imgs[i].copy()  # own buffer: never pin the whole batch
             frame.setflags(write=False)  # shared with cache + deduped waiters
-            self.cache.put(req.cache_key, frame)
+            self._cache_put_frame(req.cache_key, frame)
             fut = self._pending.pop(req.cache_key, None)
             if fut is not None:
                 done += fut._resolve(frame)
@@ -397,10 +642,13 @@ class RenderServer:
     def step(self) -> int:
         """Advance the pipeline one unit; returns requests completed.
 
-        Fills the in-flight ring up to ``pipeline_depth`` dispatches, then
-        retires the oldest batch. At depth 1 this is exactly the synchronous
+        Partial-hit jobs (cheap, row-granular) run first; then the ring fills
+        up to ``pipeline_depth`` dispatches and retires the oldest batch. At
+        depth 1 with no partial jobs this is exactly the synchronous
         submit->render->block loop this server used to run.
         """
+        if self._partial:
+            return self._run_partial(self._partial.popleft())
         while len(self._ring) < self.pipeline_depth and self._dispatch_one():
             pass
         if self._ring:
@@ -408,16 +656,21 @@ class RenderServer:
         return 0
 
     def flush(self) -> int:
-        """Retire every in-flight batch (no new dispatches); returns count."""
+        """Complete every admitted-to-render unit of work — the dispatched
+        in-flight ring AND queued partial-hit jobs — without dispatching new
+        micro-batches; returns requests completed. Invalidation goes through
+        here so no old-model tile can land after its drop."""
         done = 0
         while self._ring:
             done += self._retire_one()
+        while self._partial:
+            done += self._run_partial(self._partial.popleft())
         return done
 
     def run(self) -> int:
-        """Drain the queue and the ring; returns requests completed."""
+        """Drain the queue, partial jobs, and the ring; returns completed."""
         done = 0
-        while self.batcher.pending or self._ring:
+        while self.batcher.pending or self._ring or self._partial:
             done += self.step()
         return done
 
@@ -433,7 +686,7 @@ class RenderServer:
         if self._closed:
             return 0
         self._closed = True
-        self.flush()  # in-flight work completes — those clients get frames
+        self.flush()  # in-flight work (ring + partials) completes with frames
         failed = 0
         err = RuntimeError("RenderServer closed before this request rendered")
         for fut in self._pending.values():  # queued-but-never-dispatched only:
@@ -456,7 +709,7 @@ class RenderServer:
 
     def _advance(self) -> bool:
         """One pipeline unit on behalf of an awaited future; False if idle."""
-        if self.batcher.pending or self._ring:
+        if self.batcher.pending or self._ring or self._partial:
             self.step()
             return True
         return False
@@ -465,7 +718,9 @@ class RenderServer:
         """Zero the serving counters (e.g. after warmup laps, before a
         measured benchmark window). Leaves the cache contents, the timeline,
         and the jit traces untouched; requires an idle pipeline."""
-        assert not self._ring and not self.batcher.pending, "pipeline not idle"
+        assert not self._ring and not self.batcher.pending and not self._partial, (
+            "pipeline not idle"
+        )
         self._latencies.clear()
         self._render_s = self._dispatch_s = self._block_s = 0.0
         self._busy_until = 0.0
@@ -477,6 +732,8 @@ class RenderServer:
         self._t_first = self._t_last = None
         self.completed = 0
         self.deduped = 0
+        self.full_hits = self.partial_hits = self.frame_misses = 0
+        self.rows_rendered = self.render_rows = 0
 
     def _complete(self, req: RenderRequest, frame: np.ndarray) -> None:
         now = time.perf_counter()
@@ -489,6 +746,22 @@ class RenderServer:
                 self.frames.popitem(last=False)  # retire the oldest frame
 
     # ---------------------------------------------------------------- metrics
+    def _cache_report(self) -> dict:
+        """Frame-granular cache stats. With the tile cache on, the raw
+        FrameCache counters are per-tile; the frame-level view (what fraction
+        of *requests* were served without a full render) nests them under
+        ``tiles``."""
+        if not self.tile_cache:
+            return self.cache.stats()
+        total = self.full_hits + self.partial_hits + self.frame_misses
+        return {
+            "hits": self.full_hits,
+            "partial_hits": self.partial_hits,
+            "misses": self.frame_misses,
+            "hit_rate": round(self.full_hits / total, 4) if total else 0.0,
+            "tiles": self.cache.stats(),
+        }
+
     def report(self) -> dict:
         wall = (self._t_last - self._t_first) if (self._t_first is not None and self._t_last) else 0.0
         lat_ms = [x * 1e3 for x in self._latencies]
@@ -518,7 +791,26 @@ class RenderServer:
                 "block_s": round(self._block_s, 4),
                 "n_traces": self.n_traces,
             },
-            "cache": self.cache.stats(),
+            "cache": self._cache_report(),
+            "tiles": {
+                "enabled": self.tile_cache,
+                "grid": [self.tiles_y, self.tiles_x],
+                "full_hits": self.full_hits,
+                "partial_hits": self.partial_hits,
+                "frame_misses": self.frame_misses,
+                "rows_rendered_partial": self.rows_rendered,
+                "render_rows": self.render_rows,
+                # render work per served frame, in full-frame units: 1.0 =
+                # every request fully rendered, 0 = pure cache. THE tile
+                # economy metric — partial invalidation should pull it well
+                # under the whole-frame baseline's miss rate.
+                "renders_per_frame": round(
+                    self.render_rows / (self.tiles_y * self.completed), 4
+                )
+                if self.completed
+                else 0.0,
+                "strip_traces": self.strip_traces,
+            },
             "lod": {
                 "live_counts": list(self.pyramid.live_counts),
                 "padded_counts": [lvl.n for lvl in self.pyramid.levels],

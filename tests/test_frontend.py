@@ -128,6 +128,105 @@ def test_decoder_rejects_delta_without_base():
         dec.decode("s", meta, payload)
 
 
+def test_tiles8_roundtrip_exact_and_ships_only_changed_tiles():
+    """Changed-tile streaming: exact reconstruction, and a frame whose
+    motion touches one tile ships one tile (an identical frame ships none)."""
+    rng = np.random.default_rng(2)
+    enc = FrameEncoder(tiles=True, tile=(8, 8))
+    dec = FrameDecoder()
+    base = rng.random((24, 24, 3)).astype(np.float32)
+    meta, payload = enc.encode("s", base)
+    assert meta["encoding"] == "rgb8"  # keyframe
+    dec.decode("s", meta, payload)
+
+    # identical frame: tiles8 with zero tiles on the wire
+    meta, payload = enc.encode("s", base)
+    assert meta["encoding"] == "tiles8" and meta["tiles"] == []
+    np.testing.assert_array_equal(dec.decode("s", meta, payload), quantize_rgb8(base))
+
+    # poke ONE 8x8 tile (tile row 1, col 2 -> flat id 1*3+2=5)
+    frame = base.copy()
+    frame[10, 18] = 1.0 - frame[10, 18]
+    meta, payload = enc.encode("s", frame)
+    assert meta["encoding"] == "tiles8" and meta["tiles"] == [5]
+    got = dec.decode("s", meta, payload)
+    np.testing.assert_array_equal(got, quantize_rgb8(frame))
+    assert not got.flags.writeable
+    s = enc.stats()
+    assert s["tile_frames"] == 2 and s["tiles_shipped"] == 1
+    assert s["tiles_total"] == 18  # 9 tiles x 2 tile frames
+
+
+def test_tiles8_handles_ragged_edge_tiles():
+    rng = np.random.default_rng(3)
+    enc, dec = FrameEncoder(tiles=True, tile=(16, 16)), FrameDecoder()
+    a = rng.random((20, 28, 3)).astype(np.float32)  # ragged 16px grid
+    b = np.clip(a + 0.01, 0, 1)
+    dec.decode("s", *enc.encode("s", a))
+    meta, payload = enc.encode("s", b)
+    assert meta["encoding"] == "tiles8"
+    np.testing.assert_array_equal(dec.decode("s", meta, payload), quantize_rgb8(b))
+
+
+def test_decoder_validates_payload_length_against_header_shape():
+    """Satellite: a truncated/oversized payload from a misbehaving peer must
+    raise a protocol-level CodecError naming the stream — on the raw, delta,
+    and tiles paths — not a bare numpy reshape error."""
+    import zlib
+
+    from repro.frontend import CodecError
+
+    enc, dec = FrameEncoder(), FrameDecoder()
+    f = np.full((4, 4, 3), 0.5, np.float32)
+    meta, payload = enc.encode("cam0", f)
+    # raw: short and long payloads
+    with pytest.raises(CodecError, match="cam0.*47"):
+        dec.decode("cam0", meta, payload[:-1])
+    with pytest.raises(CodecError, match="cam0"):
+        dec.decode("cam0", meta, payload + b"\x00")
+    dec.decode("cam0", meta, payload)  # establish the delta base
+    meta2, payload2 = enc.encode("cam0", f)
+    assert meta2["encoding"] == "zdelta8"
+    # delta: decompressed size disagrees with the header shape
+    with pytest.raises(CodecError, match="cam0"):
+        dec.decode("cam0", meta2, zlib.compress(b"\x00" * 10))
+    # delta: truncated zlib stream
+    with pytest.raises(CodecError, match="cam0"):
+        dec.decode("cam0", meta2, payload2[:-2])
+    # tiles: payload shorter than the listed tiles need
+    tmeta = dict(meta2, encoding="tiles8", tile=[4, 4], tiles=[0])
+    with pytest.raises(CodecError, match="cam0"):
+        dec.decode("cam0", tmeta, zlib.compress(b"\x00" * 5))
+    # tiles: out-of-range tile id
+    with pytest.raises(CodecError, match="out of range"):
+        dec.decode("cam0", dict(tmeta, tiles=[99]), zlib.compress(b""))
+    # the decoder state survived every rejection: a good frame still decodes
+    np.testing.assert_array_equal(
+        dec.decode("cam0", meta2, payload2), quantize_rgb8(f)
+    )
+
+
+def test_encoder_falls_back_to_raw_when_compression_loses():
+    """Satellite: when the compressed delta is no smaller than raw (noisy
+    first-contact frames), ship raw and count the fallback."""
+    rng = np.random.default_rng(4)
+    for tiles in (False, True):
+        enc, dec = FrameEncoder(tiles=tiles), FrameDecoder()
+        a = rng.random((16, 16, 3)).astype(np.float32)
+        b = rng.random((16, 16, 3)).astype(np.float32)  # uncorrelated noise
+        enc.encode("s", a)
+        meta, payload = enc.encode("s", b)
+        assert meta["encoding"] == "rgb8", (tiles, meta)
+        assert len(payload) == quantize_rgb8(b).nbytes
+        assert enc.stats()["raw_fallbacks"] == 1
+        # the decoder chain stays in lockstep through the fallback
+        dec.decode("s", meta, payload)
+        c = np.clip(b + 1e-3, 0, 1)
+        meta3, payload3 = enc.encode("s", c)
+        assert meta3["encoding"] in ("zdelta8", "tiles8")
+        np.testing.assert_array_equal(dec.decode("s", meta3, payload3), quantize_rgb8(c))
+
+
 # ================================================================== gateway
 def _manager(g=None, *, pipeline_depth=2, timeline_steps=2, **kw):
     g = g if g is not None else make_scene(n=256, scale=0.06)
@@ -370,6 +469,125 @@ def test_depth1_and_depth2_identical_through_network():
                 np.testing.assert_array_equal(a[t], b[t])
         else:
             np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------- tiles over TCP
+def _read_msg(sock):
+    buf = b""
+    while len(buf) < proto.PREFIX_SIZE:
+        buf += sock.recv(proto.PREFIX_SIZE - len(buf))
+    hlen, plen = proto.unpack_prefix(buf)
+    body = b""
+    while len(body) < hlen + plen:
+        body += sock.recv(hlen + plen - len(body))
+    return next(iter_messages(buf + body))
+
+
+def test_tiles8_negotiated_and_exact_over_real_tcp(gateway_thread):
+    """Protocol v2 negotiation end-to-end: a v2 hello gets tiles8 frames, a
+    repeated pose ships ZERO tiles, and the decoded frames are bitwise the
+    in-process render. A v1 hello on the same gateway falls back to zdelta8."""
+    gt = gateway_thread
+    cam_wire = proto.camera_to_wire(make_cam(H, W))
+    dec = FrameDecoder()
+    with socket.create_connection(("127.0.0.1", gt.port), timeout=30) as s:
+        s.sendall(pack_message({
+            "type": "hello", "protocol": proto.PROTOCOL,
+            "encodings": ["rgb8", "zdelta8", "tiles8"],
+        }))
+        h, _ = _read_msg(s)
+        assert h["type"] == "hello_ok" and h["protocol"] == 2
+        assert "tiles8" in h["encodings"] and h["tile"] == [16, 16]
+        frames = []
+        for seq in range(3):
+            s.sendall(pack_message({
+                "type": "render", "seq": seq, "stream": "static",
+                "timestep": 0, "camera": cam_wire,
+            }))
+            fh, payload = _read_msg(s)
+            assert fh["type"] == "frame"
+            frames.append((fh, dec.decode("static", fh, payload)))
+        s.sendall(pack_message({"type": "bye"}))
+    assert frames[0][0]["encoding"] == "rgb8"          # keyframe
+    for fh, _ in frames[1:]:
+        assert fh["encoding"] == "tiles8"
+        assert fh["tiles"] == []                       # same pose: no tiles
+    ref = RenderServer(
+        make_scene(n=256, scale=0.06), GSConfig(img_h=H, img_w=W, k_per_tile=64),
+        n_levels=1, max_batch=4, store_frames=False,
+    )
+    with ref:
+        expect = quantize_rgb8(ref.submit(make_cam(H, W)).result())
+    for _, frame in frames:
+        np.testing.assert_array_equal(frame, expect)
+
+    # ---- a v1 peer (no protocol field) on the SAME gateway: zdelta8 path
+    with socket.create_connection(("127.0.0.1", gt.port), timeout=30) as s:
+        s.sendall(pack_message({"type": "hello"}))
+        h, _ = _read_msg(s)
+        assert h["protocol"] == 1 and h["encodings"] == ["rgb8", "zdelta8"]
+        encs = []
+        for seq in range(2):
+            s.sendall(pack_message({
+                "type": "render", "seq": seq, "stream": "static",
+                "timestep": 0, "camera": cam_wire,
+            }))
+            fh, _ = _read_msg(s)
+            encs.append(fh["encoding"])
+        s.sendall(pack_message({"type": "bye"}))
+    assert encs == ["rgb8", "zdelta8"]
+
+    # ---- a raw-only decoder must never be sent an encoding it didn't offer
+    with socket.create_connection(("127.0.0.1", gt.port), timeout=30) as s:
+        s.sendall(pack_message({
+            "type": "hello", "protocol": 2, "encodings": ["rgb8"],
+        }))
+        h, _ = _read_msg(s)
+        assert h["encodings"] == ["rgb8"]
+        encs = []
+        for seq in range(2):
+            s.sendall(pack_message({
+                "type": "render", "seq": seq, "stream": "static",
+                "timestep": 0, "camera": cam_wire,
+            }))
+            fh, _ = _read_msg(s)
+            encs.append(fh["encoding"])
+        s.sendall(pack_message({"type": "bye"}))
+    assert encs == ["rgb8", "rgb8"]
+
+
+def test_invalidation_resets_wire_delta_chain():
+    """Satellite: dropping a timestep's cached frames (model hot-swap /
+    dirty-row invalidation) must reset the frontend delta chains that
+    referenced that stream — the next frame is a fresh keyframe, not a delta
+    extending a chain rooted in superseded content."""
+    mgr = _manager(timeline_steps=0)
+    mgr.warmup()
+    gw = Gateway(mgr, port=0)
+    with GatewayThread(gw) as gt:
+        cam_wire = proto.camera_to_wire(make_cam(H, W))
+        with socket.create_connection(("127.0.0.1", gt.port), timeout=30) as s:
+            s.sendall(pack_message({
+                "type": "hello", "protocol": 2,
+                "encodings": ["rgb8", "zdelta8", "tiles8"],
+            }))
+            _read_msg(s)
+
+            def render(seq):
+                s.sendall(pack_message({
+                    "type": "render", "seq": seq, "stream": "static",
+                    "timestep": 0, "camera": cam_wire,
+                }))
+                return _read_msg(s)[0]
+
+            assert render(0)["encoding"] == "rgb8"
+            assert render(1)["encoding"] == "tiles8"  # chain established
+            # invalidate the stream's cached tiles on the engine thread
+            gw.run_on_engine(mgr.invalidate, "static", 0).result(timeout=60)
+            assert render(2)["encoding"] == "rgb8"    # chain was reset
+            assert render(3)["encoding"] == "tiles8"  # and re-establishes
+            s.sendall(pack_message({"type": "bye"}))
+    assert gw.delta_resets >= 1
 
 
 # ------------------------------------------------------------ session layer

@@ -114,16 +114,19 @@ def test_batcher_respects_max_batch_and_fifo():
 def test_cache_key_quantization():
     cam = make_cam(H, W, dist=3.0)
     q = 1e-3
-    k0 = frame_key(cam, 0, pose_quantum=q)
+    k0 = frame_key(cam, 0, height=H, width=W, pose_quantum=q)
     # sub-quantum pose jitter shares the key
     jig = cam._replace(viewmat=cam.viewmat + 1e-5)
-    assert frame_key(jig, 0, pose_quantum=q) == k0
+    assert frame_key(jig, 0, height=H, width=W, pose_quantum=q) == k0
     # super-quantum motion, another level, or other intrinsics do not
     moved = cam._replace(viewmat=cam.viewmat.at[2, 3].add(5 * q))
-    assert frame_key(moved, 0, pose_quantum=q) != k0
-    assert frame_key(cam, 1, pose_quantum=q) != k0
+    assert frame_key(moved, 0, height=H, width=W, pose_quantum=q) != k0
+    assert frame_key(cam, 1, height=H, width=W, pose_quantum=q) != k0
     zoomed = cam._replace(fx=cam.fx * 2)
-    assert frame_key(zoomed, 0, pose_quantum=q) != k0
+    assert frame_key(zoomed, 0, height=H, width=W, pose_quantum=q) != k0
+    # regression: the same quantized pose at another OUTPUT RESOLUTION must
+    # not share a key — a hit would hand back a wrong-size frame
+    assert frame_key(cam, 0, height=2 * H, width=2 * W, pose_quantum=q) != k0
 
 
 def test_cache_lru_eviction_and_stats():
