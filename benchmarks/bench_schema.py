@@ -6,25 +6,50 @@ parsers:
 
   {
     "bench":   "<benchmark name>",
-    "schema":  1,
+    "schema":  2,
     "config":  {...knobs that define the run...},
-    "metrics": {...flat floats/ints: frames_per_s, p50_ms, p99_ms, ...}
+    "metrics": {...flat floats/ints: frames_per_s, p50_ms, p99_ms, ...},
+    "stages":  {...optional per-stage latency breakdown...}
   }
+
+Schema 2 adds the optional ``stages`` block: per-stage latency histograms
+(count/sum/mean/min/max/p50/p95/p99 + bucket counts) straight from the
+``repro.obs`` registry snapshot, so a BENCH record carries distributions
+instead of only aggregate fps. Schema-1 consumers that ignore unknown keys
+keep working; ``stages`` is omitted when a benchmark has nothing to report.
 """
 from __future__ import annotations
 
 import json
 import os
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 
-def bench_record(name: str, config: dict, metrics: dict) -> dict:
-    return {"bench": name, "schema": SCHEMA_VERSION, "config": config, "metrics": metrics}
+def stage_breakdown(snapshot: dict, prefix: str | None = None) -> dict:
+    """Extract the histogram entries of a ``MetricsRegistry.snapshot()`` as a
+    BENCH ``stages`` block ({dotted name: histogram dict}). ``prefix``
+    filters to one tier (e.g. ``"server."``)."""
+    out = {}
+    for name, v in snapshot.items():
+        if prefix is not None and not name.startswith(prefix):
+            continue
+        if isinstance(v, dict) and "p99" in v and "buckets" in v:
+            out[name] = v
+    return out
 
 
-def write_bench(path: str, name: str, config: dict, metrics: dict) -> dict:
-    rec = bench_record(name, config, metrics)
+def bench_record(name: str, config: dict, metrics: dict, stages: dict | None = None) -> dict:
+    rec = {"bench": name, "schema": SCHEMA_VERSION, "config": config, "metrics": metrics}
+    if stages:
+        rec["stages"] = stages
+    return rec
+
+
+def write_bench(
+    path: str, name: str, config: dict, metrics: dict, stages: dict | None = None
+) -> dict:
+    rec = bench_record(name, config, metrics, stages)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)

@@ -39,7 +39,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
-from bench_schema import write_bench
+from bench_schema import stage_breakdown, write_bench
 from repro.core import projection as P
 from repro.core.config import GSConfig
 from repro.frontend import protocol as proto
@@ -122,6 +122,7 @@ def run_trace(name, params_by_ts, update_by_ts, dirty_rows, reqs, cfg, cache_byt
     raises SystemExit if the tile path is not bitwise the baseline."""
     servers = {}
     laps = {}
+    stages = {}
     for kind, tiled in (("tile", True), ("frame", False)):
         ts0 = sorted(params_by_ts)[0]
         srv = build_server(
@@ -140,6 +141,10 @@ def run_trace(name, params_by_ts, update_by_ts, dirty_rows, reqs, cfg, cache_byt
             srv.add_timestep(t, new_params, dirty_rows=dirty_rows if tiled else None)
         warm = lap(srv, reqs)
         laps[kind] = {"cold": cold, "update_replay": warm}
+        if tiled:
+            # stage breakdown of the replay window (lap() resets the unified
+            # registry on entry, so this snapshot covers exactly that lap)
+            stages = stage_breakdown(srv.obs.metrics.snapshot(), prefix="server.")
 
     # ---- bitwise equivalence: tile-path frames == baseline full re-renders
     for phase in ("cold", "update_replay"):
@@ -161,6 +166,7 @@ def run_trace(name, params_by_ts, update_by_ts, dirty_rows, reqs, cfg, cache_byt
     for srv in servers.values():
         srv.close()
     return {
+        "stages": stages,  # popped (not printed) by main; BENCH-record only
         "requests_per_lap": len(reqs),
         "dirty_rows": sorted(dirty_rows),
         "tiles_y": cfg.img_h // cfg.tile_h,
@@ -256,6 +262,10 @@ def main(argv=None):
         [(t, scrub_cam) for t in scrub_order], cfg, cache_bytes,
     )
 
+    stages = {
+        **{f"orbit.{k}": v for k, v in orbit.pop("stages").items()},
+        **{f"scrub.{k}": v for k, v in scrub.pop("stages").items()},
+    }
     report = {
         "scene": {"dataset": args.dataset, "gaussians": params.n, "res": args.res,
                   "changed_gaussians": int(idx.size)},
@@ -289,6 +299,7 @@ def main(argv=None):
                 "scrub_renders_per_frame_base": scrub["renders_per_frame"]["frame_replay"],
                 "tile_cache_hit_rate": orbit["tile_cache"]["hit_rate"],
             },
+            stages=stages,
         )
 
     # ---- hard acceptance: the tile economy must actually materialize

@@ -125,6 +125,15 @@ class AsyncFrontendClient:
         await proto.write_message(self._writer, {"type": proto.STATS, "seq": seq})
         return await fut
 
+    async def metrics(self) -> dict:
+        """The gateway's atomic typed-registry snapshot (protocol v2):
+        ``{"metrics": {dotted name: value|histogram}, "trace": {...}}``."""
+        seq = next(self._seq)
+        fut = asyncio.get_running_loop().create_future()
+        self._pending[seq] = {"kind": "metrics", "fut": fut}
+        await proto.write_message(self._writer, {"type": proto.METRICS, "seq": seq})
+        return await fut
+
     # ---------------------------------------------------------------- reader
     async def _read_loop(self) -> None:
         try:
@@ -175,6 +184,13 @@ class AsyncFrontendClient:
             del self._pending[seq]
             if not entry["fut"].done():
                 entry["fut"].set_result(header.get("report", {}))
+        elif mtype == proto.METRICS_OK and entry is not None:
+            del self._pending[seq]
+            if not entry["fut"].done():
+                entry["fut"].set_result(
+                    {"metrics": header.get("metrics", {}),
+                     "trace": header.get("trace", {})}
+                )
 
     def _maybe_finish_scrub(self, seq: int, entry: dict) -> None:
         if len(entry["acc"]) + len(entry["shed"]) < entry["want"]:
@@ -224,6 +240,9 @@ class FrontendClient:
 
     def stats(self) -> dict:
         return self._call(self._cl.stats())
+
+    def metrics(self) -> dict:
+        return self._call(self._cl.metrics())
 
     def close(self) -> None:
         if self._loop.is_running():

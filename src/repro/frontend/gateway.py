@@ -28,11 +28,12 @@ from __future__ import annotations
 import asyncio
 import sys
 import threading
-import time
 from concurrent.futures import ThreadPoolExecutor
 
 from repro.frontend import protocol as proto
 from repro.frontend.sessions import PendingRender, Session, SessionManager
+from repro.obs import new_request_id
+from repro.obs.clock import now as _now
 
 # error codes
 SHED = "shed"                  # load-shedding dropped this queued request
@@ -79,24 +80,87 @@ class Gateway:
         self._gate: asyncio.Event | None = None
         self._closed = False
 
-        # wave-cycle phase accounting (loop thread only): where a served
-        # frame's wall-clock goes — render executor vs encode vs socket
-        self.render_wait_s = 0.0
-        self.encode_wait_s = 0.0
-        self.write_s = 0.0
+        # the stack's shared observability bundle: the manager owns it, the
+        # engine + cache + sessions already meter onto it, and the gateway
+        # registers its tier under gateway.* — so the stats/metrics wire
+        # messages and frontend_load read ONE atomic snapshot instead of
+        # mixing loop-thread counters with render-thread counters mid-update
+        self.obs = manager.obs
+        m = self.obs.metrics
+        # wave-cycle phase accounting: where a served frame's wall-clock
+        # goes — render executor vs encode vs socket
+        self._c_render_wait_s = m.counter("gateway.render_wait_s")
+        self._c_encode_wait_s = m.counter("gateway.encode_wait_s")
+        self._c_write_s = m.counter("gateway.write_s")
+        self._c_frames_sent = m.counter("gateway.frames_sent")
+        self._c_shed_sent = m.counter("gateway.shed")
+        self._c_protocol_errors = m.counter("gateway.protocol_errors")
+        self._c_request_errors = m.counter("gateway.request_errors")
+        self._c_dropped_writes = m.counter("gateway.dropped_writes")
+        self._c_delivery_errors = m.counter("gateway.delivery_errors")
+        self._c_engine_errors = m.counter("gateway.engine_errors")
+        self._c_delta_resets = m.counter("gateway.delta_resets")
+        self._c_bytes_out = m.counter("gateway.bytes_out")
+        self._c_waves = m.counter("gateway.waves")
+        self._c_connections = m.counter("gateway.connections_total")
 
-        # counters (loop thread only)
-        self.frames_sent = 0
-        self.shed_sent = 0
-        self.protocol_errors = 0
-        self.request_errors = 0
-        self.dropped_writes = 0
-        self.delivery_errors = 0
-        self.engine_errors = 0
-        self.delta_resets = 0  # stream invalidations -> forced keyframes
-        self.bytes_out = 0
-        self.waves = 0
-        self.connections_total = 0
+    # historical attribute reads, now backed by the shared registry
+    @property
+    def render_wait_s(self) -> float:
+        return self._c_render_wait_s.value
+
+    @property
+    def encode_wait_s(self) -> float:
+        return self._c_encode_wait_s.value
+
+    @property
+    def write_s(self) -> float:
+        return self._c_write_s.value
+
+    @property
+    def frames_sent(self) -> int:
+        return self._c_frames_sent.value
+
+    @property
+    def shed_sent(self) -> int:
+        return self._c_shed_sent.value
+
+    @property
+    def protocol_errors(self) -> int:
+        return self._c_protocol_errors.value
+
+    @property
+    def request_errors(self) -> int:
+        return self._c_request_errors.value
+
+    @property
+    def dropped_writes(self) -> int:
+        return self._c_dropped_writes.value
+
+    @property
+    def delivery_errors(self) -> int:
+        return self._c_delivery_errors.value
+
+    @property
+    def engine_errors(self) -> int:
+        return self._c_engine_errors.value
+
+    @property
+    def delta_resets(self) -> int:
+        """Stream invalidations -> forced keyframes."""
+        return self._c_delta_resets.value
+
+    @property
+    def bytes_out(self) -> int:
+        return self._c_bytes_out.value
+
+    @property
+    def waves(self) -> int:
+        return self._c_waves.value
+
+    @property
+    def connections_total(self) -> int:
+        return self._c_connections.value
 
     # -------------------------------------------------------------- lifecycle
     async def start(self) -> "Gateway":
@@ -175,11 +239,12 @@ class Gateway:
             queue_limit=self.queue_limit,
             delta_encoding=self.delta_encoding,
             tile=(cfg.tile_h, cfg.tile_w),
+            metrics=self.obs.metrics,
         )
         self._sessions[session.session_id] = session
         self._writers[session.session_id] = writer
         self._conn_tasks.add(asyncio.current_task())
-        self.connections_total += 1
+        self._c_connections.inc()
         try:
             while True:
                 try:
@@ -188,7 +253,7 @@ class Gateway:
                     msg = await proto.read_message(reader, max_payload=1 << 16)
                 except proto.ProtocolError as e:
                     # framing is gone — tell the peer once and hang up
-                    self.protocol_errors += 1
+                    self._c_protocol_errors.inc()
                     await self._send(session, {"type": proto.ERROR, "code": BAD_REQUEST,
                                                "detail": str(e)})
                     break
@@ -239,7 +304,7 @@ class Gateway:
                 except TypeError:
                     pass  # unhashable entries become bad_request in _admit_renders
             if not isinstance(ts, list) or not ts:
-                self.request_errors += 1
+                self._c_request_errors.inc()
                 session.errors_sent += 1
                 await self._send(session, {"type": proto.ERROR, "seq": seq,
                                            "code": BAD_REQUEST,
@@ -258,10 +323,20 @@ class Gateway:
             ))
             await self._send(session, {"type": proto.STATS_OK, "seq": seq,
                                        "report": report})
+        elif mtype == proto.METRICS:
+            # the typed-registry view: one ATOMIC flat snapshot (no executor
+            # hop needed — the registry lock makes cross-thread reads safe)
+            rec = self.obs.trace
+            await self._send(session, {
+                "type": proto.METRICS_OK, "seq": seq,
+                "metrics": self.obs.metrics.snapshot(),
+                "trace": {"enabled": bool(rec), "recorded": rec.recorded,
+                          "dropped": rec.dropped},
+            })
         elif mtype == proto.BYE:
             return False
         else:
-            self.protocol_errors += 1
+            self._c_protocol_errors.inc()
             session.errors_sent += 1
             await self._send(session, {"type": proto.ERROR, "seq": seq,
                                        "code": BAD_REQUEST,
@@ -282,7 +357,7 @@ class Gateway:
         except (proto.ProtocolError, KeyError, TypeError, ValueError) as e:
             # malformed fields (non-int timesteps included) answer with a
             # bad_request frame instead of killing the connection handler
-            self.request_errors += 1
+            self._c_request_errors.inc()
             session.errors_sent += 1
             await self._send(session, {"type": proto.ERROR, "seq": seq,
                                        "code": BAD_REQUEST, "detail": str(e)})
@@ -293,15 +368,32 @@ class Gateway:
         # full-timeline scrub would otherwise deterministically shed itself
         limit = max(session.queue_limit, len(resolved))
         bulk = len(resolved) > 1
+        rec = self.obs.trace
         for i, (t, global_ts) in enumerate(resolved):
-            victim = session.admit(PendingRender(
+            # the request id is minted HERE, at admission — the root of the
+            # span tree; it rides the PendingRender into RenderServer.submit
+            # so engine spans join the same tree
+            pr = PendingRender(
                 session=session, seq=seq, stream_id=stream_id, timestep=t,
-                global_ts=global_ts, cam=cam, t_admit=time.perf_counter(),
+                global_ts=global_ts, cam=cam, t_admit=_now(),
                 scrub_last=i == len(resolved) - 1, bulk=bulk,
-            ), limit=limit)
+                request_id=new_request_id(),
+            )
+            if rec:
+                rec.record(pr.request_id, "admit", pr.t_admit,
+                           session=session.session_id, seq=seq,
+                           stream=stream_id, timestep=t, bulk=bulk)
+            victim = session.admit(pr, limit=limit)
             if victim is not None:
-                self.shed_sent += 1
+                self._c_shed_sent.inc()
                 victim.session.errors_sent += 1
+                if rec:
+                    # a shed request's tree must END visibly, not vanish:
+                    # the terminated span covers admit -> shed decision
+                    rec.record(victim.request_id, "shed", victim.t_admit,
+                               _now(), terminated=True, seq=victim.seq,
+                               stream=victim.stream_id,
+                               timestep=victim.timestep)
                 await self._send(victim.session, {
                     "type": proto.ERROR, "seq": victim.seq, "code": SHED,
                     "stream": victim.stream_id, "timestep": victim.timestep,
@@ -343,17 +435,24 @@ class Gateway:
                     wave.extend(session.take(self.wave_per_session))
                 if not wave:
                     break
-                self.waves += 1
-                t0 = time.perf_counter()
+                self._c_waves.inc()
+                t0 = _now()
+                rec = self.obs.trace
+                if rec:
+                    # queue residency: admit -> picked up by this wave
+                    wid = self._c_waves.value
+                    for pr in wave:
+                        rec.record(pr.request_id, "coalesce", pr.t_admit, t0,
+                                   wave=wid, wave_size=len(wave))
                 try:
                     results = await loop.run_in_executor(
                         self._render_exec, self._render_wave, wave
                     )
                 except Exception:  # noqa: BLE001 - last-ditch: the dispatcher
-                    self.engine_errors += 1  # must outlive any engine surprise
+                    self._c_engine_errors.inc()  # must outlive engine surprises
                     continue
                 finally:
-                    self.render_wait_s += time.perf_counter() - t0
+                    self._c_render_wait_s.add(_now() - t0)
                 # deliver (encode + write) in a CHAINED background task and
                 # immediately collect the next wave: clients that request
                 # ahead (any streaming viewer) keep the render thread busy
@@ -374,7 +473,7 @@ class Gateway:
             # without this, the successor's gather(return_exceptions=True)
             # would silently eat the exception and every counter would read
             # "all fine" while a whole wave of clients hangs
-            self.delivery_errors += 1
+            self._c_delivery_errors.inc()
 
     async def _deliver_inner(self, results: list) -> None:
         loop = asyncio.get_running_loop()
@@ -383,10 +482,10 @@ class Gateway:
         # wave encodes, so the first post-update frame ships as a keyframe
         # rather than extending a chain rooted in superseded content
         for sid in self.manager.take_dirty():
-            self.delta_resets += 1
+            self._c_delta_resets.inc()
             for s in list(self._sessions.values()):
                 s.encoder.reset(sid)
-        t1 = time.perf_counter()
+        t1 = _now()
         # One executor hop encodes the WHOLE wave (per-frame hops cost a
         # thread wakeup + loop wakeup each — measurable at localhost rates).
         # Small waves skip the hop entirely: an executor round-trip costs
@@ -402,11 +501,12 @@ class Gateway:
             encoded = await loop.run_in_executor(
                 self._encode_exec, self._encode_wave, results
             )
-        t2 = time.perf_counter()
-        self.encode_wait_s += t2 - t1
+        t2 = _now()
+        self._c_encode_wait_s.add(t2 - t1)
+        rec = self.obs.trace
         for pr, err, header, payload in encoded:
             if err is not None:
-                self.request_errors += 1
+                self._c_request_errors.inc()
                 pr.session.errors_sent += 1
                 await self._send(pr.session, {
                     "type": proto.ERROR, "seq": pr.seq, "code": RENDER_ERROR,
@@ -414,19 +514,31 @@ class Gateway:
                     "detail": str(err),
                 })
                 continue
-            if await self._send(pr.session, header, payload):
-                self.frames_sent += 1
+            if rec:
+                w0 = _now()
+            ok = await self._send(pr.session, header, payload)
+            if rec:
+                rec.record(pr.request_id, "write", w0, _now(),
+                           bytes=len(payload), ok=ok)
+            if ok:
+                self._c_frames_sent.inc()
                 pr.session.frames_sent += 1
-        self.write_s += time.perf_counter() - t2
+        self._c_write_s.add(_now() - t2)
 
     def _encode_wave(self, results: list) -> list:
         """Encode executor only: quantize+compress one wave's frames."""
         out = []
+        rec = self.obs.trace
         for pr, frame, err in results:
             if err is not None:
                 out.append((pr, err, None, None))
                 continue
+            if rec:
+                e0 = _now()
             meta, payload = pr.session.encoder.encode(pr.stream_id, frame)
+            if rec:
+                rec.record(pr.request_id, "encode", e0, _now(),
+                           encoding=meta.get("encoding"), bytes=len(payload))
             out.append((pr, None, {
                 "type": proto.FRAME, "seq": pr.seq, "stream": pr.stream_id,
                 "timestep": pr.timestep, "last": pr.scrub_last, **meta,
@@ -446,6 +558,7 @@ class Gateway:
                 futs.append((pr, server.submit(
                     pr.cam, timestep=pr.global_ts, client_id=pr.session.session_id,
                     t_submit=pr.t_admit,
+                    request_id=pr.request_id if pr.request_id >= 0 else None,
                 )))
             except Exception as e:  # bad state (e.g. closing): fail just this one
                 out.append((pr, None, e))
@@ -467,13 +580,13 @@ class Gateway:
     async def _send(self, session: Session, header: dict, payload: bytes = b"") -> bool:
         writer = self._writers.get(session.session_id)
         if writer is None:
-            self.dropped_writes += 1
+            self._c_dropped_writes.inc()
             return False
         try:
-            self.bytes_out += await proto.write_message(writer, header, payload)
+            self._c_bytes_out.inc(await proto.write_message(writer, header, payload))
             return True
         except (OSError, RuntimeError):  # peer vanished / transport broke
-            self.dropped_writes += 1
+            self._c_dropped_writes.inc()
             return False
 
     # --------------------------------------------------------------- metrics
@@ -484,28 +597,40 @@ class Gateway:
         return {**self._gateway_stats(), **self.manager.report()}
 
     def _gateway_stats(self) -> dict:
-        """Loop-thread-owned counters + per-session snapshots."""
+        """Gateway-tier stats from ONE atomic registry snapshot.
+
+        Historically this mixed loop-thread counters with engine metrics the
+        render executor was mutating mid-read (torn values under load); every
+        gateway counter now lives on the shared registry, so a single locked
+        ``snapshot()`` yields a consistent point in time regardless of which
+        thread asks. Per-session dicts stay loop-thread-only (they iterate
+        ``_sessions``, which only the loop mutates)."""
+        snap = self.obs.metrics.snapshot()
+
+        def g(name, default=0):
+            return snap.get("gateway." + name, default)
+
         return {
             "gateway": {
                 "host": self.host,
                 "port": self.port,
-                "connections_total": self.connections_total,
+                "connections_total": g("connections_total"),
                 "sessions_now": len(self._sessions),
-                "frames_sent": self.frames_sent,
-                "shed": self.shed_sent,
-                "protocol_errors": self.protocol_errors,
-                "request_errors": self.request_errors,
-                "dropped_writes": self.dropped_writes,
-                "delivery_errors": self.delivery_errors,
-                "engine_errors": self.engine_errors,
-                "delta_resets": self.delta_resets,
-                "bytes_out": self.bytes_out,
-                "waves": self.waves,
+                "frames_sent": g("frames_sent"),
+                "shed": g("shed"),
+                "protocol_errors": g("protocol_errors"),
+                "request_errors": g("request_errors"),
+                "dropped_writes": g("dropped_writes"),
+                "delivery_errors": g("delivery_errors"),
+                "engine_errors": g("engine_errors"),
+                "delta_resets": g("delta_resets"),
+                "bytes_out": g("bytes_out"),
+                "waves": g("waves"),
                 "queue_limit": self.queue_limit,
                 "wave_per_session": self.wave_per_session,
-                "render_wait_s": round(self.render_wait_s, 4),
-                "encode_wait_s": round(self.encode_wait_s, 4),
-                "write_s": round(self.write_s, 4),
+                "render_wait_s": round(g("render_wait_s", 0.0), 4),
+                "encode_wait_s": round(g("encode_wait_s", 0.0), 4),
+                "write_s": round(g("write_s", 0.0), 4),
             },
             "sessions": {s.session_id: s.stats() for s in self._sessions.values()},
         }

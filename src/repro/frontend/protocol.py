@@ -21,6 +21,7 @@ Message types (header["type"]):
   scrub                one camera across many timesteps -> many ``frame``s
   frame                response payload = encoded RGB8 (see ``encode.py``)
   stats / stats_ok     gateway + serving-engine metrics snapshot
+  metrics / metrics_ok atomic typed-registry snapshot (v2; flat dotted names)
   error                failure for a specific seq (code: shed/bad_request/...)
   bye                  client-initiated clean shutdown of the connection
 
@@ -63,6 +64,7 @@ MAX_PAYLOAD_BYTES = 1 << 28  # one frame; 256 MB is beyond any sane config
 HELLO, HELLO_OK = "hello", "hello_ok"
 RENDER, FRAME, SCRUB = "render", "frame", "scrub"
 STATS, STATS_OK = "stats", "stats_ok"
+METRICS, METRICS_OK = "metrics", "metrics_ok"  # v2: typed-registry snapshot
 ERROR, BYE = "error", "bye"
 
 

@@ -24,7 +24,6 @@ import collections
 import dataclasses
 import itertools
 import threading
-import time
 from typing import Iterable, Mapping
 
 from repro.core import gaussians as G
@@ -32,6 +31,8 @@ from repro.core.config import GSConfig
 from repro.core.projection import Camera
 from repro.frontend import protocol as proto
 from repro.frontend.encode import RAW8, TILES8, ZDELTA8, FrameEncoder
+from repro.obs import MetricsRegistry, Obs
+from repro.obs.clock import now as _now
 from repro.serve_gs import RenderServer
 
 STREAM_STRIDE = 1 << 20  # global-timeline block reserved per stream
@@ -56,8 +57,12 @@ class StreamInfo:
 class SessionManager:
     """Registers streams on one shared ``RenderServer`` and owns its life."""
 
-    def __init__(self, cfg: GSConfig, **server_kw):
+    def __init__(self, cfg: GSConfig, *, obs: Obs | None = None, **server_kw):
         self.cfg = cfg
+        # one Obs bundle for the whole stack this manager fronts: the shared
+        # RenderServer, its cache, every session, and the gateway all meter
+        # onto this registry, so one reset()/snapshot() covers every tier
+        self.obs = obs if obs is not None else Obs()
         self._server_kw = dict(server_kw)
         self.server: RenderServer | None = None
         self.streams: dict[str, StreamInfo] = {}
@@ -84,7 +89,8 @@ class SessionManager:
         for t, params in entries:
             if self.server is None:
                 self.server = RenderServer(
-                    params, self.cfg, timestep=base + int(t), **self._server_kw
+                    params, self.cfg, timestep=base + int(t), obs=self.obs,
+                    **self._server_kw
                 )
                 self.server.add_invalidation_listener(self._on_invalidate)
             else:
@@ -203,6 +209,7 @@ class PendingRender:
     t_admit: float
     scrub_last: bool = False  # final item of a scrub fan-out
     bulk: bool = False        # part of a multi-item (scrub) admission unit
+    request_id: int = -1      # obs id minted at admit; joins the span tree
 
 
 class Session:
@@ -214,6 +221,7 @@ class Session:
         queue_limit: int,
         delta_encoding: bool = True,
         tile: tuple[int, int] = (16, 16),
+        metrics: MetricsRegistry | None = None,
     ):
         assert queue_limit >= 1, queue_limit
         self.session_id = next(_session_ids)
@@ -223,11 +231,16 @@ class Session:
         self.tile = (int(tile[0]), int(tile[1]))
         self.protocol = 1  # until the hello negotiates higher
         self.encoder = FrameEncoder(delta=delta_encoding)
+        # per-connection lifetime tallies (stats() on the wire). The shared
+        # registry additionally aggregates them across sessions under
+        # sessions.* so one snapshot/reset covers the session tier too.
         self.shed = 0
         self.admitted = 0
         self.frames_sent = 0
         self.errors_sent = 0
-        self.t_connect = time.perf_counter()
+        self._agg_admitted = metrics.counter("sessions.admitted") if metrics else None
+        self._agg_shed = metrics.counter("sessions.shed") if metrics else None
+        self.t_connect = _now()
 
     def admit(self, pr: PendingRender, *, limit: int | None = None) -> PendingRender | None:
         """Queue one request; returns the request shed to make room (the
@@ -254,9 +267,13 @@ class Session:
                     victim = cand
                     del self.queue[i]
                     self.shed += 1
+                    if self._agg_shed:
+                        self._agg_shed.inc()
                     break
         self.queue.append(pr)
         self.admitted += 1
+        if self._agg_admitted:
+            self._agg_admitted.inc()
         return victim
 
     def negotiate(self, protocol, encodings: Iterable[str] | None) -> int:
@@ -291,5 +308,5 @@ class Session:
             "queued_now": len(self.queue),
             "queue_limit": self.queue_limit,
             "encoder": self.encoder.stats(),
-            "uptime_s": round(time.perf_counter() - self.t_connect, 3),
+            "uptime_s": round(_now() - self.t_connect, 3),
         }

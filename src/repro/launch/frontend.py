@@ -31,6 +31,7 @@ from repro.core.projection import look_at_camera
 from repro.frontend import FrontendClient, Gateway, GatewayThread, SessionManager
 from repro.insitu import TemporalCheckpointStore, timeline_stream
 from repro.launch.serve_gs import init_params_from_volume, load_params_from_ckpt
+from repro.obs import Obs, validate_trace_jsonl, write_trace
 
 
 def synthetic_timeline(params, n_steps: int, *, drift: float = 0.08) -> dict:
@@ -101,6 +102,12 @@ def main(argv=None):
                     help="disable zlib delta frame encoding (always raw RGB8)")
     ap.add_argument("--serve-seconds", type=float, default=0.0,
                     help="serve for N seconds then exit (0 = until Ctrl-C)")
+    # observability
+    ap.add_argument("--trace-out", default=None, metavar="PATH.jsonl",
+                    help="record request span traces; on exit write JSONL "
+                         "here plus a Perfetto-viewable .chrome.json next to it")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="span ring size (oldest spans drop beyond this)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -120,8 +127,10 @@ def main(argv=None):
         )
     cfg = GSConfig(img_h=args.res, img_w=args.res, k_per_tile=128 if args.smoke else 256)
 
+    obs = Obs(trace=args.trace_out is not None, trace_capacity=args.trace_capacity)
     manager = SessionManager(
         cfg,
+        obs=obs,
         n_levels=args.levels,
         keep_ratio=args.keep_ratio,
         max_batch=args.max_batch,
@@ -174,6 +183,13 @@ def main(argv=None):
         pass
     finally:
         gt.stop()
+        if args.trace_out:
+            spans = obs.trace.drain()
+            jsonl_path, chrome_path = write_trace(args.trace_out, spans)
+            with open(jsonl_path) as f:
+                n = validate_trace_jsonl(f.read())
+            print(f"trace: {n} spans -> {jsonl_path} + {chrome_path} "
+                  f"(dropped={obs.trace.dropped})")
 
 
 if __name__ == "__main__":

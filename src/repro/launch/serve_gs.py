@@ -23,6 +23,7 @@ from repro.configs.gs_datasets import DATASETS
 from repro.core import gaussians as G
 from repro.core.config import GSConfig
 from repro.core.train import init_state
+from repro.obs import Obs, validate_trace_jsonl, write_trace
 from repro.serve_gs import RenderServer, make_clients, run_load
 from repro.volume import datasets as VD
 from repro.volume.isosurface import extract_isosurface_points
@@ -75,6 +76,9 @@ def main(argv=None):
                     "tile-granular cache + partial strip renders)")
     ap.add_argument("--rate", type=float, default=0.0, help="request rounds per second (0 = flat out)")
     ap.add_argument("--report", default=None, help="write the JSON report here too")
+    ap.add_argument("--trace-out", default=None, metavar="PATH.jsonl",
+                    help="record request span traces; on exit write JSONL "
+                         "here plus a Perfetto-viewable .chrome.json next to it")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -90,9 +94,11 @@ def main(argv=None):
         )
     cfg = GSConfig(img_h=args.res, img_w=args.res, k_per_tile=128 if args.smoke else 256)
 
+    obs = Obs(trace=args.trace_out is not None)
     with RenderServer(
         params,
         cfg,
+        obs=obs,
         n_levels=args.levels,
         keep_ratio=args.keep_ratio,
         max_batch=args.max_batch,
@@ -129,6 +135,13 @@ def main(argv=None):
         os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
         with open(args.report, "w") as f:
             f.write(out)
+    if args.trace_out:
+        spans = obs.trace.drain()
+        jsonl_path, chrome_path = write_trace(args.trace_out, spans)
+        with open(jsonl_path) as f:
+            n = validate_trace_jsonl(f.read())
+        print(f"trace: {n} spans -> {jsonl_path} + {chrome_path} "
+              f"(dropped={obs.trace.dropped})")
     assert report["completed"] == args.clients * args.requests, (
         f"pipelined path dropped requests: completed {report['completed']} of "
         f"{args.clients * args.requests}"

@@ -1,0 +1,122 @@
+"""Trace exporters: JSONL (replay-harness contract) + Chrome trace events.
+
+JSONL — one span per line, the input format for the future trace-driven
+replay harness (ROADMAP item 5). The contract, which ``validate_trace_jsonl``
+enforces and tests pin:
+
+    {"rid": int >= 0, "span": str, "t0": float, "t1": float >= t0, ...meta}
+
+``rid`` joins a request's spans into one tree; ``span`` is the stage name
+(normally from ``trace.STAGES`` — consumers must ignore unknown names);
+``t0``/``t1`` are seconds on the shared monotonic clock (``obs.clock.now``),
+same epoch across every line of one file. Remaining keys are stage metadata
+(batch id/size, cache outcome, encoding, byte counts) and are optional.
+
+Chrome trace-event JSON — the same spans as complete ("ph": "X") events,
+viewable in Perfetto / chrome://tracing. Each stage gets its own lane
+(tid), ordered by pipeline position, so a coalesce wave reads top-to-bottom
+as admit → coalesce → render → ... with per-request args attached.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, Sequence
+
+from repro.obs.trace import STAGES, Span
+
+__all__ = [
+    "spans_to_jsonl",
+    "spans_to_chrome",
+    "write_trace",
+    "validate_trace_jsonl",
+]
+
+_RESERVED = ("rid", "span", "t0", "t1")
+
+
+def spans_to_jsonl(spans: Iterable[Span]) -> str:
+    """Render spans as JSONL (one compact object per line, trailing newline;
+    empty string for no spans)."""
+    lines = []
+    for s in spans:
+        obj = {"rid": s.rid, "span": s.name, "t0": s.t0, "t1": s.t1}
+        for k, v in s.meta.items():
+            if k not in _RESERVED:
+                obj[k] = v
+        lines.append(json.dumps(obj, separators=(",", ":"), default=str))
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def spans_to_chrome(spans: Sequence[Span]) -> dict:
+    """Render spans as a Chrome trace-event JSON object (Perfetto-viewable).
+
+    One pid, one lane (tid) per stage in pipeline order; timestamps are
+    microseconds relative to the earliest span so the viewport opens on the
+    data instead of hours into an arbitrary epoch."""
+    spans = list(spans)
+    base = min((s.t0 for s in spans), default=0.0)
+    lanes = {name: i + 1 for i, name in enumerate(STAGES)}
+    events = []
+    for name, tid in lanes.items():
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
+            "args": {"name": f"{tid:02d}.{name}"},
+        })
+    for s in spans:
+        tid = lanes.get(s.name)
+        if tid is None:  # unknown stage -> shared overflow lane
+            tid = len(STAGES) + 1
+        ev = {
+            "name": s.name,
+            "ph": "X",
+            "pid": 1,
+            "tid": tid,
+            "ts": round((s.t0 - base) * 1e6, 3),
+            "dur": round(max(s.t1 - s.t0, 0.0) * 1e6, 3),
+            "args": {"rid": s.rid, **s.meta},
+        }
+        events.append(ev)
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_trace(path: str, spans: Sequence[Span]) -> tuple[str, str]:
+    """Write ``path`` (JSONL) and ``path`` with a ``.json`` suffix swapped in
+    (Chrome trace events). Returns ``(jsonl_path, chrome_path)``."""
+    spans = list(spans)
+    jsonl_path = str(path)
+    with open(jsonl_path, "w") as f:
+        f.write(spans_to_jsonl(spans))
+    stem = jsonl_path[: -len(".jsonl")] if jsonl_path.endswith(".jsonl") else jsonl_path
+    chrome_path = stem + ".chrome.json"
+    with open(chrome_path, "w") as f:
+        json.dump(spans_to_chrome(spans), f)
+    return jsonl_path, chrome_path
+
+
+def validate_trace_jsonl(text: str) -> int:
+    """Validate JSONL trace text against the schema contract; returns the
+    number of span lines. Raises ``ValueError`` naming the first bad line."""
+    n = 0
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"trace line {lineno}: not JSON ({e})") from None
+        if not isinstance(obj, dict):
+            raise ValueError(f"trace line {lineno}: not an object")
+        for key in _RESERVED:
+            if key not in obj:
+                raise ValueError(f"trace line {lineno}: missing {key!r}")
+        if not isinstance(obj["rid"], int) or obj["rid"] < 0:
+            raise ValueError(f"trace line {lineno}: bad rid {obj['rid']!r}")
+        if not isinstance(obj["span"], str) or not obj["span"]:
+            raise ValueError(f"trace line {lineno}: bad span {obj['span']!r}")
+        t0, t1 = obj["t0"], obj["t1"]
+        if not isinstance(t0, (int, float)) or not isinstance(t1, (int, float)):
+            raise ValueError(f"trace line {lineno}: non-numeric t0/t1")
+        if t1 < t0:
+            raise ValueError(f"trace line {lineno}: t1 < t0 ({t1} < {t0})")
+        n += 1
+    return n

@@ -10,14 +10,12 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
 from typing import Iterable
 
 import numpy as np
 
 from repro.core.projection import Camera
-
-_ids = itertools.count()
+from repro.obs import new_request_id
 
 
 @dataclasses.dataclass
@@ -31,7 +29,9 @@ class RenderRequest:
     cache_key: tuple | None = None
     timestep: int = 0                    # timeline position (time-scrubbing)
     future: object | None = None         # FrameFuture delivering this frame
-    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # ids come from the process-wide obs mint so a request keeps one id from
+    # gateway admit through batcher queueing to span export
+    request_id: int = dataclasses.field(default_factory=new_request_id)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,6 +36,7 @@ import hashlib
 import numpy as np
 
 from repro.core.projection import Camera
+from repro.obs import MetricsRegistry
 
 
 def quantize_camera(
@@ -119,6 +120,13 @@ class FrameCache:
     does, since tile entries are far more numerous than frames). Either at 0
     disables the cache entirely. Eviction is LRU by key; a buffer's bytes are
     released only when its last referencing key is gone.
+
+    Metrics live on a :class:`repro.obs.MetricsRegistry` under ``cache.*`` —
+    pass the stack's shared registry via ``metrics`` (as ``RenderServer``
+    does) so one ``registry.reset()`` clears the cache window together with
+    every other tier; a standalone cache gets a private registry. The
+    historical attribute reads (``cache.hits`` etc.) remain as properties.
+    Structural state (entries, bytes held) is NOT metrics and survives reset.
     """
 
     def __init__(
@@ -127,6 +135,7 @@ class FrameCache:
         *,
         capacity_bytes: int | None = None,
         dedup: bool = True,
+        metrics: MetricsRegistry | None = None,
     ):
         assert capacity is None or capacity >= 0
         assert capacity_bytes is None or capacity_bytes >= 0
@@ -136,12 +145,40 @@ class FrameCache:
         self._store: collections.OrderedDict[tuple, _Blob] = collections.OrderedDict()
         self._blobs: dict[bytes, _Blob] = {}
         self._bytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.dropped = 0          # entries removed by drop() (invalidation)
-        self.dedup_shared = 0     # puts that reused an existing buffer
-        self.dedup_bytes_saved = 0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._hits = self.metrics.counter("cache.hits")
+        self._misses = self.metrics.counter("cache.misses")
+        self._evictions = self.metrics.counter("cache.evictions")
+        self._dropped = self.metrics.counter("cache.dropped")
+        self._dedup_shared = self.metrics.counter("cache.dedup_shared")
+        self._dedup_bytes_saved = self.metrics.counter("cache.dedup_bytes_saved")
+
+    # historical attribute reads, now backed by the shared registry
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
+
+    @property
+    def dropped(self) -> int:
+        """Entries removed by drop() (invalidation)."""
+        return self._dropped.value
+
+    @property
+    def dedup_shared(self) -> int:
+        """Puts that reused an existing buffer."""
+        return self._dedup_shared.value
+
+    @property
+    def dedup_bytes_saved(self) -> int:
+        return self._dedup_bytes_saved.value
 
     def __len__(self) -> int:
         return len(self._store)
@@ -158,10 +195,10 @@ class FrameCache:
     def get(self, key: tuple) -> np.ndarray | None:
         blob = self._store.get(key)
         if blob is None:
-            self.misses += 1
+            self._misses.inc()
             return None
         self._store.move_to_end(key)
-        self.hits += 1
+        self._hits.inc()
         return blob.data
 
     # ------------------------------------------------------------- refcounts
@@ -202,8 +239,8 @@ class FrameCache:
         digest = _digest(frame) if dedup else None
         blob = self._blobs.get(digest) if digest is not None else None
         if blob is not None:
-            self.dedup_shared += 1
-            self.dedup_bytes_saved += frame.nbytes
+            self._dedup_shared.inc()
+            self._dedup_bytes_saved.inc(frame.nbytes)
         else:
             blob = _Blob(frame, digest)
         old = self._store.get(key)
@@ -219,7 +256,7 @@ class FrameCache:
         ):
             victim, vblob = self._store.popitem(last=False)
             self._decref(vblob)
-            self.evictions += 1
+            self._evictions.inc()
             if victim == key:  # a single entry larger than the whole budget
                 break
 
@@ -231,7 +268,7 @@ class FrameCache:
         keys = [k for k in self._store if predicate(k)]
         for k in keys:
             self._remove(k)
-        self.dropped += len(keys)
+        self._dropped.inc(len(keys))
         return len(keys)
 
     @property

@@ -49,7 +49,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import NamedTuple
 
 import jax
@@ -60,6 +59,8 @@ from repro.core import gaussians as G
 from repro.core.config import GSConfig
 from repro.core.projection import Camera
 from repro.core.train import make_batched_eval_render, make_tile_row_render
+from repro.obs import DEFAULT_SIZE_BUCKETS, Obs
+from repro.obs.clock import now as _now
 from repro.serve_gs.batcher import (
     MicroBatch,
     MicroBatcher,
@@ -72,6 +73,8 @@ from repro.serve_gs.lod import LODPyramid, build_lod_pyramid, front_camera, sele
 
 
 def _percentile(xs: list[float], q: float) -> float:
+    """Exact percentile over a raw sample list (benchmark clients keep raw
+    client-side latency samples; the serving tiers use registry histograms)."""
     return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
 
 
@@ -184,8 +187,13 @@ class RenderServer:
         frames_capacity: int = 256,
         pipeline_depth: int = 2,
         timestep: int = 0,
+        obs: Obs | None = None,
     ):
         self.cfg = cfg
+        # the observability bundle every tier of this stack shares: one
+        # metrics registry (atomic snapshot, one reset) + the span recorder
+        # (falsy NULL_RECORDER unless tracing is enabled)
+        self.obs = obs if obs is not None else Obs()
         self.mesh = mesh if mesh is not None else jax.make_mesh((1, 1), ("data", "model"))
         self.pose_quantum = pose_quantum
         self.store_frames = store_frames
@@ -258,6 +266,7 @@ class RenderServer:
             # tiles); whole frames essentially never collide, so the
             # baseline skips the per-put hash entirely
             dedup=self.tile_cache,
+            metrics=self.obs.metrics,
         )
         # bounded retirement buffer of recently served frames (request_id ->
         # frame); a sustained-load server must not pin every frame ever served
@@ -269,30 +278,72 @@ class RenderServer:
         self._partial: collections.deque[_PartialJob] = collections.deque()
         self._strip_renders: dict[tuple[int, int], object] = {}  # (level, row)
         self._invalidation_listeners: list = []
-        self.deduped = 0
         self._closed = False
 
-        # ---- metrics
-        self._latencies: list[float] = []
-        self._render_s = 0.0
-        self._busy_until = 0.0  # end of the last retired in-flight window
-        self._dispatch_s = 0.0
-        self._block_s = 0.0
-        self._render_calls = 0
-        self._level_requests = [0] * n_levels
-        self._timestep_requests: dict[int, int] = {}
-        self._batch_sizes: list[int] = []
-        self._occupancy: list[int] = []  # ring depth observed at each dispatch
-        self._t_first: float | None = None
-        self._t_last: float | None = None
-        self.completed = 0
+        # ---- metrics: typed registry entries under server.* (see repro.obs).
+        # Everything here is a WINDOW quantity — one registry.reset() zeroes
+        # it across this tier and every other tier sharing the registry.
+        m = self.obs.metrics
+        self._completed = m.counter("server.completed")
+        self._deduped = m.counter("server.deduped")
+        self._c_render_s = m.counter("server.render_s")
+        self._c_dispatch_s = m.counter("server.dispatch_s")
+        self._c_block_s = m.counter("server.block_s")
+        self._render_calls = m.counter("server.render_calls")
+        self._latency_ms = m.histogram("server.latency_ms")
+        self._batch_sizes = m.histogram("server.batch_size", DEFAULT_SIZE_BUCKETS)
+        self._occupancy = m.histogram("server.occupancy", DEFAULT_SIZE_BUCKETS)
         # ---- tile-path metrics (frame-granular; the cache's own hit/miss
         # counters are per-TILE once tile_cache is on)
-        self.full_hits = 0       # every tile cached: resolved at submit
-        self.partial_hits = 0    # some tiles cached: only missing rows render
-        self.frame_misses = 0    # no usable tiles: full micro-batched render
-        self.rows_rendered = 0   # tile rows rendered by the partial path
-        self.render_rows = 0     # total tile rows rendered for real requests
+        self._full_hits = m.counter("server.full_hits")        # resolved at submit
+        self._partial_hits = m.counter("server.partial_hits")  # missing rows render
+        self._frame_misses = m.counter("server.frame_misses")  # full render
+        self._rows_rendered = m.counter("server.rows_rendered_partial")
+        self._render_rows = m.counter("server.render_rows")
+        # window state the registry can't hold (distributions over dynamic
+        # key sets, window timestamps) — cleared by the same reset() via hook
+        self._busy_until = 0.0  # end of the last retired in-flight window
+        self._level_requests = [0] * n_levels
+        self._timestep_requests: dict[int, int] = {}
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        m.on_reset(self._reset_window_state)
+
+    def _reset_window_state(self) -> None:
+        """registry.reset() hook: clear the window state held outside it."""
+        self._busy_until = 0.0
+        self._level_requests = [0] * self.n_levels
+        self._timestep_requests = {}
+        self._t_first = self._t_last = None
+
+    # historical attribute reads, now backed by the shared registry
+    @property
+    def completed(self) -> int:
+        return self._completed.value
+
+    @property
+    def deduped(self) -> int:
+        return self._deduped.value
+
+    @property
+    def full_hits(self) -> int:
+        return self._full_hits.value
+
+    @property
+    def partial_hits(self) -> int:
+        return self._partial_hits.value
+
+    @property
+    def frame_misses(self) -> int:
+        return self._frame_misses.value
+
+    @property
+    def rows_rendered(self) -> int:
+        return self._rows_rendered.value
+
+    @property
+    def render_rows(self) -> int:
+        return self._render_rows.value
 
     # first-entry aliases — the pre-timeline (static scene) public surface;
     # properties so they track add_timestep() re-registering the first entry
@@ -409,14 +460,14 @@ class RenderServer:
         not touch the serving metrics or the cache.
         """
         buckets = buckets or self.batcher.buckets
-        t0 = time.perf_counter()
+        t0 = _now()
         for ts in timesteps if timesteps is not None else [self.timesteps()[0]]:
             entry = self._entry(ts)
             cam = front_camera(entry.pyramid, img_h=self.cfg.img_h, img_w=self.cfg.img_w)
             for lvl, lp in enumerate(entry.level_params):
                 for b in buckets:
                     jax.block_until_ready(self._level_render[lvl](lp, stack_cameras([cam] * b)))
-        return time.perf_counter() - t0
+        return _now() - t0
 
     # ------------------------------------------------------------------ admit
     def submit(
@@ -426,6 +477,7 @@ class RenderServer:
         timestep: int = 0,
         client_id: int = -1,
         t_submit: float | None = None,
+        request_id: int | None = None,
     ) -> FrameFuture:
         """Admit one camera request; returns its :class:`FrameFuture`.
 
@@ -433,10 +485,14 @@ class RenderServer:
         requests matching an *in-flight* key attach to the existing future
         (one render serves every concurrent duplicate); everything else is
         queued for the next micro-batch.
+
+        ``request_id`` carries an id minted upstream (the gateway mints at
+        admit) so the span tree keeps one id end to end; in-process callers
+        omit it and the request mints its own.
         """
         if self._closed:
             raise RuntimeError("RenderServer is closed")
-        t = time.perf_counter() if t_submit is None else t_submit
+        t = _now() if t_submit is None else t_submit
         if self._t_first is None:
             self._t_first = t
         entry = self._entry(timestep)
@@ -445,51 +501,77 @@ class RenderServer:
             cam, level, height=self.cfg.img_h, width=self.cfg.img_w,
             timestep=timestep, pose_quantum=self.pose_quantum,
         )
+        kw = {} if request_id is None else {"request_id": int(request_id)}
         req = RenderRequest(
             cam=cam, level=level, t_submit=t, client_id=client_id, cache_key=key,
-            timestep=int(timestep),
+            timestep=int(timestep), **kw,
         )
         self._level_requests[level] += 1
         self._timestep_requests[int(timestep)] = self._timestep_requests.get(int(timestep), 0) + 1
+        rec = self.obs.trace
 
         tiles = None
         if self.tile_cache and not self.cache.disabled:
             # fast path: the stitched frame itself is cached (zero-copy hit)
             frame = self.cache.get(tile_key(key, ASSEMBLED))
             if frame is not None:
-                self.full_hits += 1
+                self._full_hits.inc()
+                if rec:
+                    rec.record(req.request_id, "submit", t, _now(),
+                               outcome="full_hit", level=level, timestep=int(timestep))
                 fut = FrameFuture(self, key, req)
                 fut._resolve(frame)
                 return fut
             tiles = [self.cache.get(tile_key(key, ti)) for ti in range(self.n_tiles)]
             if all(t is not None for t in tiles):  # full hit: assemble once
-                self.full_hits += 1
+                self._full_hits.inc()
+                a0 = _now()
                 frame = self._assemble(tiles)
                 self.cache.put(tile_key(key, ASSEMBLED), frame, dedup=False)
+                if rec:
+                    a1 = _now()
+                    rec.record(req.request_id, "submit", t, a0,
+                               outcome="full_hit", level=level, timestep=int(timestep))
+                    rec.record(req.request_id, "assemble", a0, a1, tiles=self.n_tiles)
                 fut = FrameFuture(self, key, req)
                 fut._resolve(frame)
                 return fut
         else:
             frame = self.cache.get(key)
             if frame is not None:
+                if rec:
+                    rec.record(req.request_id, "submit", t, _now(),
+                               outcome="cache_hit", level=level, timestep=int(timestep))
                 fut = FrameFuture(self, key, req)
                 fut._resolve(frame)
                 return fut
         fut = self._pending.get(key)
         if fut is not None:  # identical pose already in flight: render once
             fut._attach(req)
-            self.deduped += 1
+            self._deduped.inc()
+            if rec:
+                rec.record(req.request_id, "submit", t, _now(),
+                           outcome="dedup", primary=fut.request_id,
+                           level=level, timestep=int(timestep))
             return fut
         fut = FrameFuture(self, key, req)
         req.future = fut
         self._pending[key] = fut
         if tiles is not None and any(t is not None for t in tiles):
             # partial hit: a dedicated job renders only the missing tile rows
-            self.partial_hits += 1
+            self._partial_hits.inc()
+            if rec:
+                missing = sum(1 for x in tiles if x is None)
+                rec.record(req.request_id, "submit", t, _now(),
+                           outcome="partial_hit", missing_tiles=missing,
+                           level=level, timestep=int(timestep))
             self._partial.append(_PartialJob(req=req, fut=fut, tiles=tiles))
         else:
             if self.tile_cache:
-                self.frame_misses += 1
+                self._frame_misses.inc()
+            if rec:
+                rec.record(req.request_id, "submit", t, _now(),
+                           outcome="miss", level=level, timestep=int(timestep))
             self.batcher.submit(req)
         return fut
 
@@ -543,7 +625,7 @@ class RenderServer:
         on most (level, row) pairs — benchmarks and latency-sensitive insitu
         deployments warm the rows they expect to invalidate."""
         assert self.tile_cache, "tile-row renders exist only with tile_cache"
-        t0 = time.perf_counter()
+        t0 = _now()
         for ts in timesteps if timesteps is not None else [self.timesteps()[0]]:
             entry = self._entry(ts)
             cam = front_camera(entry.pyramid, img_h=self.cfg.img_h, img_w=self.cfg.img_w)
@@ -553,7 +635,7 @@ class RenderServer:
                     jax.block_until_ready(
                         self._strip_fn(lvl, row)(entry.level_params[lvl], cam_np)
                     )
-        return time.perf_counter() - t0
+        return _now() - t0
 
     def _run_partial(self, job: _PartialJob) -> int:
         """Render a partial hit's missing tile rows, assemble, resolve."""
@@ -563,13 +645,13 @@ class RenderServer:
         missing = sorted(
             {ti // self.tiles_x for ti, t in enumerate(job.tiles) if t is None}
         )
-        t0 = time.perf_counter()
+        t0 = _now()
         # dispatch every missing row first (jax async dispatch), then block
         launched = [
             (r, self._strip_fn(req.level, r)(entry.level_params[req.level], cam_np))
             for r in missing
         ]
-        self._dispatch_s += time.perf_counter() - t0
+        self._c_dispatch_s.add(_now() - t0)
         for r, dev in launched:
             strip = np.asarray(jax.block_until_ready(dev))  # (tile_h, W, 3)
             for tx in range(self.tiles_x):
@@ -581,14 +663,20 @@ class RenderServer:
                     tile.setflags(write=False)
                     self.cache.put(tile_key(req.cache_key, ti), tile)
                     job.tiles[ti] = tile
-        now = time.perf_counter()
-        self._block_s += now - t0
-        self._render_s += now - max(t0, self._busy_until)
+        now = _now()
+        self._c_block_s.add(now - t0)
+        self._c_render_s.add(now - max(t0, self._busy_until))
         self._busy_until = now
-        self.rows_rendered += len(missing)
-        self.render_rows += len(missing)
+        self._rows_rendered.inc(len(missing))
+        self._render_rows.inc(len(missing))
+        rec = self.obs.trace
+        if rec:
+            rec.record(req.request_id, "render", t0, now,
+                       partial=True, rows=len(missing), level=req.level)
         frame = self._assemble(job.tiles)
         self.cache.put(tile_key(req.cache_key, ASSEMBLED), frame, dedup=False)
+        if rec:
+            rec.record(req.request_id, "assemble", now, _now(), tiles=self.n_tiles)
         fut = self._pending.pop(req.cache_key, None)
         if fut is not None:
             return fut._resolve(frame)
@@ -602,34 +690,37 @@ class RenderServer:
         if mb is None:
             return False
         entry = self._entry(mb.timestep)
-        t0 = time.perf_counter()
+        t0 = _now()
         imgs = self._level_render[mb.level](
             entry.level_params[mb.level], jax.tree_util.tree_map(np.asarray, mb.cams)
         )
-        self._dispatch_s += time.perf_counter() - t0
-        self._render_calls += 1
-        self._batch_sizes.append(len(mb.requests))
+        self._c_dispatch_s.add(_now() - t0)
+        self._render_calls.inc()
+        self._batch_sizes.observe(len(mb.requests))
         self._ring.append(_InFlight(mb, imgs, t0))
-        self._occupancy.append(len(self._ring))
+        self._occupancy.observe(len(self._ring))
         return True
 
     def _retire_one(self) -> int:
         """Block on the oldest in-flight batch and deliver its frames."""
         inf = self._ring.popleft()
-        t0 = time.perf_counter()
+        t0 = _now()
         imgs = np.asarray(jax.block_until_ready(inf.imgs))
-        now = time.perf_counter()
-        self._block_s += now - t0
+        now = _now()
+        self._c_block_s.add(now - t0)
         # render.total_s is the UNION of in-flight windows (device-busy wall):
         # overlapping batches must not double-count, or depth>=2 would report
         # more render seconds than wall-clock and look slower per frame
-        self._render_s += now - max(inf.t_dispatch, self._busy_until)
+        self._c_render_s.add(now - max(inf.t_dispatch, self._busy_until))
         self._busy_until = now
         done = 0
-        self.render_rows += self.tiles_y * len(inf.mb.requests)
+        self._render_rows.inc(self.tiles_y * len(inf.mb.requests))
+        rec = self.obs.trace
         for i, req in enumerate(inf.mb.requests):
             frame = imgs[i].copy()  # own buffer: never pin the whole batch
             frame.setflags(write=False)  # shared with cache + deduped waiters
+            if rec:
+                r0 = _now()
             self._cache_put_frame(req.cache_key, frame)
             fut = self._pending.pop(req.cache_key, None)
             if fut is not None:
@@ -637,6 +728,11 @@ class RenderServer:
             else:  # pragma: no cover - defensive: request outside the table
                 self._complete(req, frame)
                 done += 1
+            if rec:
+                rec.record(req.request_id, "render", inf.t_dispatch, now,
+                           batch=len(inf.mb.requests), bucket=inf.mb.bucket,
+                           level=inf.mb.level, timestep=inf.mb.timestep)
+                rec.record(req.request_id, "retire", r0, _now())
         return done
 
     def step(self) -> int:
@@ -715,31 +811,21 @@ class RenderServer:
         return False
 
     def reset_metrics(self) -> None:
-        """Zero the serving counters (e.g. after warmup laps, before a
-        measured benchmark window). Leaves the cache contents, the timeline,
-        and the jit traces untouched; requires an idle pipeline."""
+        """Open a fresh measurement window (e.g. after warmup laps, before a
+        benchmark lap) by resetting the WHOLE shared registry: this tier, the
+        cache, and — when the stack shares one ``Obs`` — sessions, encoders,
+        and the gateway, in one atomic call. Leaves structural state (cache
+        contents, timeline, jit traces) untouched; requires an idle pipeline."""
         assert not self._ring and not self.batcher.pending and not self._partial, (
             "pipeline not idle"
         )
-        self._latencies.clear()
-        self._render_s = self._dispatch_s = self._block_s = 0.0
-        self._busy_until = 0.0
-        self._render_calls = 0
-        self._level_requests = [0] * self.n_levels
-        self._timestep_requests = {}
-        self._batch_sizes.clear()
-        self._occupancy.clear()
-        self._t_first = self._t_last = None
-        self.completed = 0
-        self.deduped = 0
-        self.full_hits = self.partial_hits = self.frame_misses = 0
-        self.rows_rendered = self.render_rows = 0
+        self.obs.metrics.reset()
 
     def _complete(self, req: RenderRequest, frame: np.ndarray) -> None:
-        now = time.perf_counter()
+        now = _now()
         self._t_last = now
-        self._latencies.append(now - req.t_submit)
-        self.completed += 1
+        self._latency_ms.observe((now - req.t_submit) * 1e3)
+        self._completed.inc()
         if self.store_frames:
             self.frames[req.request_id] = frame
             while len(self.frames) > self.frames_capacity:
@@ -764,31 +850,30 @@ class RenderServer:
 
     def report(self) -> dict:
         wall = (self._t_last - self._t_first) if (self._t_first is not None and self._t_last) else 0.0
-        lat_ms = [x * 1e3 for x in self._latencies]
+        lat = self._latency_ms
         return {
             "completed": self.completed,
             "wall_s": round(wall, 4),
             "frames_per_s": round(self.completed / wall, 2) if wall > 0 else float("inf"),
             "latency_ms": {
-                "p50": round(_percentile(lat_ms, 50), 3),
-                "p99": round(_percentile(lat_ms, 99), 3),
-                "max": round(max(lat_ms), 3) if lat_ms else 0.0,
+                "p50": round(lat.percentile(50), 3),
+                "p95": round(lat.percentile(95), 3),
+                "p99": round(lat.percentile(99), 3),
+                "max": round(lat.vmax, 3) if lat.vmax is not None else 0.0,
             },
             "render": {
-                "calls": self._render_calls,
-                "total_s": round(self._render_s, 4),
-                "mean_batch": round(float(np.mean(self._batch_sizes)), 2) if self._batch_sizes else 0.0,
+                "calls": self._render_calls.value,
+                "total_s": round(self._c_render_s.value, 4),
+                "mean_batch": round(self._batch_sizes.mean, 2),
             },
             "pipeline": {
                 "depth": self.pipeline_depth,
                 "deduped": self.deduped,
                 "in_flight_now": len(self._ring),
-                "max_in_flight": max(self._occupancy) if self._occupancy else 0,
-                "mean_in_flight": (
-                    round(float(np.mean(self._occupancy)), 3) if self._occupancy else 0.0
-                ),
-                "dispatch_s": round(self._dispatch_s, 4),
-                "block_s": round(self._block_s, 4),
+                "max_in_flight": int(self._occupancy.vmax or 0),
+                "mean_in_flight": round(self._occupancy.mean, 3),
+                "dispatch_s": round(self._c_dispatch_s.value, 4),
+                "block_s": round(self._c_block_s.value, 4),
                 "n_traces": self.n_traces,
             },
             "cache": self._cache_report(),
