@@ -56,7 +56,8 @@ from repro.frontend import (
 from repro.insitu import TemporalCheckpointStore, timeline_stream
 from repro.launch.frontend import synthetic_timeline
 from repro.launch.serve_gs import init_params_from_volume
-from repro.obs import validate_trace_jsonl, write_trace
+from repro.launch.tune import load_recommended_knobs
+from repro.obs import Histogram, trace_meta, validate_trace_jsonl, write_trace
 from repro.serve_gs import make_clients
 from repro.serve_gs.server import _percentile
 
@@ -220,6 +221,11 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--pipeline-depth", type=int, default=2)
     ap.add_argument("--queue-limit", type=int, default=8)
+    ap.add_argument("--wave-per-session", type=int, default=4)
+    ap.add_argument("--coalesce-ms", type=float, default=2.0)
+    ap.add_argument("--config-from", default=None, metavar="RECOMMEND.json",
+                    help="apply the knobs recommended by repro.launch.tune "
+                         "(coalesce/batch/depth/queue/wave) before serving")
     ap.add_argument("--client-window", type=int, default=2,
                     help="in-flight requests per client (1 = strict lockstep)")
     ap.add_argument("--no-delta", action="store_true")
@@ -228,12 +234,31 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None, metavar="PATH.jsonl",
                     help="run one extra traced lap, export its span trees as "
                          "JSONL + Chrome trace JSON, and gate the overhead")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="span ring size for the traced lap")
     ap.add_argument("--max-trace-overhead", type=float, default=0.5,
                     help="fail if the traced lap loses more than this "
                          "fraction of fps vs the slower untraced lap "
                          "(lenient: shared CI hosts are noisy)")
     ap.add_argument("--out", default="BENCH_frontend.json")
     args = ap.parse_args(argv)
+
+    if args.config_from:
+        # knobs recommended by repro.launch.tune (replay-driven autotuning);
+        # unknown-to-this-driver knobs (cache_scale) are ignored
+        knobs = load_recommended_knobs(args.config_from)
+        for knob, attr in (
+            ("coalesce_ms", "coalesce_ms"), ("max_batch", "max_batch"),
+            ("pipeline_depth", "pipeline_depth"), ("queue_limit", "queue_limit"),
+            ("wave_per_session", "wave_per_session"),
+        ):
+            if knob in knobs:
+                setattr(args, attr, type(getattr(args, attr))(knobs[knob]))
+        print(f"config-from {args.config_from}: "
+              f"coalesce_ms={args.coalesce_ms} max_batch={args.max_batch} "
+              f"pipeline_depth={args.pipeline_depth} "
+              f"queue_limit={args.queue_limit} "
+              f"wave_per_session={args.wave_per_session}")
 
     if args.smoke:
         args.res, args.volume_res, args.max_points = 32, 32, 800
@@ -283,13 +308,28 @@ def main(argv=None):
             if k.startswith("gateway.") and not isinstance(v, dict)
         }
 
+    # per-lap histogram accumulation: bucket counts ADD across laps
+    # (Histogram.merge), so the BENCH stages block describes every lap's
+    # samples at full percentile fidelity — not just the best-timed lap
+    hist_acc: dict[str, Histogram] = {}
+
+    def _accumulate_hists(snapshot: dict) -> None:
+        for k, v in snapshot.items():
+            if isinstance(v, dict) and "counts" in v:
+                if k in hist_acc:
+                    hist_acc[k].merge(v)
+                else:
+                    hist_acc[k] = Histogram.from_dict(v, k)
+
     gateway = Gateway(
         manager, port=0, queue_limit=args.queue_limit,
+        wave_per_session=args.wave_per_session,
+        coalesce_ms=args.coalesce_ms,
         delta_encoding=not args.no_delta,
     )
     gt = GatewayThread(gateway).start()
     try:
-        rep_net, laps, gw_laps, stages_snap = None, [], [], {}
+        rep_net, laps, gw_laps = None, [], []
         for _ in range(2):
             # cold cache per lap, routed through the engine's single thread
             gateway.run_on_engine(manager.server.cache.drop, lambda k: True).result()
@@ -299,8 +339,9 @@ def main(argv=None):
             laps.append(rep)
             snap = manager.obs.metrics.snapshot()
             gw_laps.append(_gw_counters(snap))
+            _accumulate_hists(snap)
             if rep_net is None or rep["frames_per_s"] > rep_net["frames_per_s"]:
-                rep_net, stages_snap = rep, snap
+                rep_net = rep
             gateway.run_on_engine(manager.obs.metrics.reset).result()
 
         # ---- optional third lap with span tracing live: same trace, fps
@@ -308,24 +349,37 @@ def main(argv=None):
         # trees exported as JSONL + Chrome trace JSON and re-validated
         trace_info = None
         if args.trace_out:
-            manager.obs.enable_trace()
+            manager.obs.enable_trace(args.trace_capacity)
             gateway.run_on_engine(manager.server.cache.drop, lambda k: True).result()
             rep_traced = asyncio.run(
                 drive_clients("127.0.0.1", gt.port, trace, args.client_window)
             )
             laps.append(rep_traced)
-            gw_laps.append(_gw_counters(manager.obs.metrics.snapshot()))
+            snap = manager.obs.metrics.snapshot()
+            gw_laps.append(_gw_counters(snap))
+            _accumulate_hists(snap)
             spans = manager.obs.trace.drain()
             dropped = manager.obs.trace.dropped
+            # the knobs that produced this trace travel in the export header
+            # so launch.tune replays against the real baseline configuration
+            meta = trace_meta(manager.obs.trace, knobs={
+                "coalesce_ms": args.coalesce_ms,
+                "max_batch": args.max_batch,
+                "pipeline_depth": args.pipeline_depth,
+                "queue_limit": args.queue_limit,
+                "wave_per_session": args.wave_per_session,
+            })
             manager.obs.disable_trace()
-            jsonl_path, chrome_path = write_trace(args.trace_out, spans)
+            jsonl_path, chrome_path = write_trace(args.trace_out, spans, meta=meta)
             with open(jsonl_path) as f:
                 n_spans = validate_trace_jsonl(f.read())
             floor_fps = min(lap["frames_per_s"] for lap in laps[:2])
             overhead = round(1.0 - rep_traced["frames_per_s"] / max(floor_fps, 1e-9), 3)
             trace_info = {
-                "spans": n_spans, "dropped": dropped,
+                "spans": int(n_spans), "dropped": dropped,
                 "traced_frames_per_s": rep_traced["frames_per_s"],
+                "traced_p50_ms": rep_traced["p50_ms"],
+                "traced_p99_ms": rep_traced["p99_ms"],
                 "overhead": overhead,
                 "jsonl": jsonl_path, "chrome": chrome_path,
             }
@@ -374,7 +428,9 @@ def main(argv=None):
                 "res": args.res, "gaussians": params.n, "devices": n_dev,
                 "streams": len(stats["streams"]), "pipeline_depth": args.pipeline_depth,
                 "queue_limit": args.queue_limit, "delta": not args.no_delta,
-                "smoke": args.smoke,
+                "wave_per_session": args.wave_per_session,
+                "coalesce_ms": args.coalesce_ms, "max_batch": args.max_batch,
+                "config_from": args.config_from, "smoke": args.smoke,
             },
             metrics={
                 "frames_per_s": rep_net["frames_per_s"],
@@ -392,9 +448,19 @@ def main(argv=None):
                 "tile_frames": rep_net["wire"]["tile_frames"],
                 "raw_fallbacks": rep_net["wire"]["raw_fallbacks"],
                 **({"trace_spans": trace_info["spans"],
-                    "trace_overhead": trace_info["overhead"]} if trace_info else {}),
+                    "trace_overhead": trace_info["overhead"],
+                    # the traced lap's own measured numbers: the ones the
+                    # replay harness (launch.tune --measured) calibrates
+                    # against, since the exported spans describe THAT lap
+                    "trace_frames_per_s": trace_info["traced_frames_per_s"],
+                    "trace_p50_ms": trace_info["traced_p50_ms"],
+                    "trace_p99_ms": trace_info["traced_p99_ms"]} if trace_info else {}),
             },
-            stages=stage_breakdown(stages_snap),
+            # stages merged across every lap (histogram bucket counts add),
+            # filtered through the same schema shape check as before
+            stages=stage_breakdown(
+                {k: h.snapshot() for k, h in sorted(hist_acc.items())}
+            ),
         )
 
     # ---- hard acceptance over EVERY lap (not just the best-timed one):

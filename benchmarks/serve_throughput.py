@@ -110,6 +110,11 @@ def main(argv=None):
         help="in-flight depth for the pipelined scenario (sync baseline is 1)",
     )
     ap.add_argument(
+        "--config-from", default=None, metavar="RECOMMEND.json",
+        help="apply engine knobs (max_batch, pipeline_depth) recommended by "
+        "repro.launch.tune; gateway-tier knobs in the file are ignored here",
+    )
+    ap.add_argument(
         "--max-trace-overhead", type=float, default=0.25,
         help="fail if the span-traced lap loses more than this fraction of "
         "fps vs the slower untraced lap (the recorder itself costs well "
@@ -122,6 +127,16 @@ def main(argv=None):
         "cross-PR perf trajectory",
     )
     args = ap.parse_args(argv)
+
+    if args.config_from:
+        from repro.launch.tune import load_recommended_knobs
+        knobs = load_recommended_knobs(args.config_from)
+        if "max_batch" in knobs:
+            args.max_batch = int(knobs["max_batch"])
+        if "pipeline_depth" in knobs:
+            args.pipeline_depth = int(knobs["pipeline_depth"])
+        print(f"config-from {args.config_from}: max_batch={args.max_batch} "
+              f"pipeline_depth={args.pipeline_depth}")
 
     if args.smoke:
         args.res, args.volume_res, args.max_points = 32, 32, 800

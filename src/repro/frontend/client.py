@@ -127,7 +127,9 @@ class AsyncFrontendClient:
 
     async def metrics(self) -> dict:
         """The gateway's atomic typed-registry snapshot (protocol v2):
-        ``{"metrics": {dotted name: value|histogram}, "trace": {...}}``."""
+        ``{"metrics": {dotted name: value|histogram}, "trace": {...},
+        "slo": {...}|None}`` — ``slo`` carries the gateway's live window
+        state (p99, budget burn, ok/warn/breach) when SLO tracking is on."""
         seq = next(self._seq)
         fut = asyncio.get_running_loop().create_future()
         self._pending[seq] = {"kind": "metrics", "fut": fut}
@@ -189,7 +191,8 @@ class AsyncFrontendClient:
             if not entry["fut"].done():
                 entry["fut"].set_result(
                     {"metrics": header.get("metrics", {}),
-                     "trace": header.get("trace", {})}
+                     "trace": header.get("trace", {}),
+                     "slo": header.get("slo")}
                 )
 
     def _maybe_finish_scrub(self, seq: int, entry: dict) -> None:

@@ -32,7 +32,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 from repro.frontend import protocol as proto
 from repro.frontend.sessions import PendingRender, Session, SessionManager
-from repro.obs import new_request_id
+from repro.obs import SLOTracker, new_request_id
 from repro.obs.clock import now as _now
 
 # error codes
@@ -56,6 +56,7 @@ class Gateway:
         coalesce_ms: float = 2.0,
         inline_encode_bytes: int = 1 << 20,
         gil_switch_interval_s: float | None = 5e-4,
+        slo: dict | None = None,
     ):
         self.manager = manager
         self.host = host
@@ -103,6 +104,13 @@ class Gateway:
         self._c_bytes_out = m.counter("gateway.bytes_out")
         self._c_waves = m.counter("gateway.waves")
         self._c_connections = m.counter("gateway.connections_total")
+        # end-to-end served latency (admit -> socket write done, ms): the
+        # histogram the SLO tracker windows and bench stage blocks report
+        self._h_request_ms = m.histogram("gateway.request_ms")
+        # live SLO monitoring (opt-in): ``slo`` is SLOTracker kwargs, e.g.
+        # {"p99_ms": 250, "window_s": 30, "budget": 0.01} — the parsed form
+        # of the CLI's --slo flag. Surfaced in stats + the metrics message.
+        self.slo = SLOTracker(m, **slo) if slo else None
 
     # historical attribute reads, now backed by the shared registry
     @property
@@ -332,6 +340,7 @@ class Gateway:
                 "metrics": self.obs.metrics.snapshot(),
                 "trace": {"enabled": bool(rec), "recorded": rec.recorded,
                           "dropped": rec.dropped},
+                "slo": self.slo.report() if self.slo is not None else None,
             })
         elif mtype == proto.BYE:
             return False
@@ -523,7 +532,11 @@ class Gateway:
             if ok:
                 self._c_frames_sent.inc()
                 pr.session.frames_sent += 1
+                # end-to-end served latency: admit -> response on the wire
+                self._h_request_ms.observe((_now() - pr.t_admit) * 1e3)
         self._c_write_s.add(_now() - t2)
+        if self.slo is not None:
+            self.slo.tick()  # fold this wave into the SLO window promptly
 
     def _encode_wave(self, results: list) -> list:
         """Encode executor only: quantize+compress one wave's frames."""
@@ -631,6 +644,7 @@ class Gateway:
                 "render_wait_s": round(g("render_wait_s", 0.0), 4),
                 "encode_wait_s": round(g("encode_wait_s", 0.0), 4),
                 "write_s": round(g("write_s", 0.0), 4),
+                "slo": self.slo.report() if self.slo is not None else None,
             },
             "sessions": {s.session_id: s.stats() for s in self._sessions.values()},
         }

@@ -240,6 +240,10 @@ class Session:
         self.errors_sent = 0
         self._agg_admitted = metrics.counter("sessions.admitted") if metrics else None
         self._agg_shed = metrics.counter("sessions.shed") if metrics else None
+        # queue residency (admit -> picked up by a wave, ms), aggregated
+        # across sessions: the admission-side half of the served-latency
+        # story the SLO window watches on gateway.request_ms
+        self._h_queue_ms = metrics.histogram("sessions.queue_ms") if metrics else None
         self.t_connect = _now()
 
     def admit(self, pr: PendingRender, *, limit: int | None = None) -> PendingRender | None:
@@ -296,7 +300,12 @@ class Session:
 
     def take(self, n: int) -> list[PendingRender]:
         """Pop up to ``n`` queued requests (FIFO) for a dispatch wave."""
-        return [self.queue.popleft() for _ in range(min(n, len(self.queue)))]
+        out = [self.queue.popleft() for _ in range(min(n, len(self.queue)))]
+        if self._h_queue_ms is not None and out:
+            t = _now()
+            for pr in out:
+                self._h_queue_ms.observe((t - pr.t_admit) * 1e3)
+        return out
 
     def stats(self) -> dict:
         return {

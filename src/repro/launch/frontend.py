@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import numpy as np
@@ -31,7 +32,7 @@ from repro.core.projection import look_at_camera
 from repro.frontend import FrontendClient, Gateway, GatewayThread, SessionManager
 from repro.insitu import TemporalCheckpointStore, timeline_stream
 from repro.launch.serve_gs import init_params_from_volume, load_params_from_ckpt
-from repro.obs import Obs, validate_trace_jsonl, write_trace
+from repro.obs import Obs, parse_slo_spec, trace_meta, validate_trace_jsonl, write_trace
 
 
 def synthetic_timeline(params, n_steps: int, *, drift: float = 0.08) -> dict:
@@ -108,7 +109,12 @@ def main(argv=None):
                          "here plus a Perfetto-viewable .chrome.json next to it")
     ap.add_argument("--trace-capacity", type=int, default=65536,
                     help="span ring size (oldest spans drop beyond this)")
+    ap.add_argument("--slo", default=None, metavar="p99_ms=N[,window_s=S,budget=B]",
+                    help="live SLO tracking on served latency; state "
+                         "(ok/warn/breach + budget burn) shows up in the "
+                         "stats and metrics wire messages")
     args = ap.parse_args(argv)
+    slo_kw = parse_slo_spec(args.slo) if args.slo else None
 
     if args.smoke:
         args.res = min(args.res, 32)
@@ -157,6 +163,7 @@ def main(argv=None):
         queue_limit=args.queue_limit,
         wave_per_session=args.wave_per_session,
         delta_encoding=not args.no_delta,
+        slo=slo_kw,
     )
     gt = GatewayThread(gateway).start()
     try:
@@ -185,11 +192,24 @@ def main(argv=None):
         gt.stop()
         if args.trace_out:
             spans = obs.trace.drain()
-            jsonl_path, chrome_path = write_trace(args.trace_out, spans)
+            # the knobs ride in the export header: a later launch.tune run
+            # replays against the exact configuration that produced the trace
+            meta = trace_meta(obs.trace, knobs={
+                "coalesce_ms": gateway.coalesce_ms,
+                "max_batch": args.max_batch,
+                "pipeline_depth": args.pipeline_depth,
+                "queue_limit": args.queue_limit,
+                "wave_per_session": args.wave_per_session,
+            })
+            jsonl_path, chrome_path = write_trace(args.trace_out, spans, meta=meta)
             with open(jsonl_path) as f:
                 n = validate_trace_jsonl(f.read())
-            print(f"trace: {n} spans -> {jsonl_path} + {chrome_path} "
-                  f"(dropped={obs.trace.dropped})")
+            print(f"trace: {n} spans -> {jsonl_path} + {chrome_path}")
+            if n.dropped:
+                print(f"WARNING: span ring overflowed — {n.dropped} spans "
+                      f"LOST (capacity {obs.trace.capacity}); raise "
+                      f"--trace-capacity before trusting replay fits",
+                      file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +24,7 @@ from repro.configs.gs_datasets import DATASETS
 from repro.core import gaussians as G
 from repro.core.config import GSConfig
 from repro.core.train import init_state
-from repro.obs import Obs, validate_trace_jsonl, write_trace
+from repro.obs import Obs, trace_meta, validate_trace_jsonl, write_trace
 from repro.serve_gs import RenderServer, make_clients, run_load
 from repro.volume import datasets as VD
 from repro.volume.isosurface import extract_isosurface_points
@@ -79,6 +80,8 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None, metavar="PATH.jsonl",
                     help="record request span traces; on exit write JSONL "
                          "here plus a Perfetto-viewable .chrome.json next to it")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="span ring size (oldest spans drop beyond this)")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -94,7 +97,7 @@ def main(argv=None):
         )
     cfg = GSConfig(img_h=args.res, img_w=args.res, k_per_tile=128 if args.smoke else 256)
 
-    obs = Obs(trace=args.trace_out is not None)
+    obs = Obs(trace=args.trace_out is not None, trace_capacity=args.trace_capacity)
     with RenderServer(
         params,
         cfg,
@@ -137,11 +140,18 @@ def main(argv=None):
             f.write(out)
     if args.trace_out:
         spans = obs.trace.drain()
-        jsonl_path, chrome_path = write_trace(args.trace_out, spans)
+        meta = trace_meta(obs.trace, knobs={
+            "max_batch": args.max_batch,
+            "pipeline_depth": args.pipeline_depth,
+        })
+        jsonl_path, chrome_path = write_trace(args.trace_out, spans, meta=meta)
         with open(jsonl_path) as f:
             n = validate_trace_jsonl(f.read())
-        print(f"trace: {n} spans -> {jsonl_path} + {chrome_path} "
-              f"(dropped={obs.trace.dropped})")
+        print(f"trace: {n} spans -> {jsonl_path} + {chrome_path}")
+        if n.dropped:
+            print(f"WARNING: span ring overflowed — {n.dropped} spans LOST "
+                  f"(capacity {obs.trace.capacity}); raise --trace-capacity "
+                  f"before trusting replay fits", file=sys.stderr)
     assert report["completed"] == args.clients * args.requests, (
         f"pipelined path dropped requests: completed {report['completed']} of "
         f"{args.clients * args.requests}"

@@ -12,8 +12,10 @@ from __future__ import annotations
 
 from repro.obs.clock import now, since
 from repro.obs.export import (
+    TraceCheck,
     spans_to_chrome,
     spans_to_jsonl,
+    trace_meta,
     validate_trace_jsonl,
     write_trace,
 )
@@ -25,6 +27,7 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
 )
+from repro.obs.slo import SLOTracker, parse_slo_spec
 from repro.obs.trace import (
     NULL_RECORDER,
     STAGES,
@@ -54,6 +57,10 @@ __all__ = [
     "spans_to_chrome",
     "write_trace",
     "validate_trace_jsonl",
+    "trace_meta",
+    "TraceCheck",
+    "SLOTracker",
+    "parse_slo_spec",
 ]
 
 

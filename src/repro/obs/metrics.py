@@ -110,14 +110,23 @@ class Gauge:
 class Histogram:
     """Fixed-bucket histogram with exact count/sum/min/max and interpolated
     percentiles. Bucket ``i`` counts samples ``<= bounds[i]``; one overflow
-    bucket catches the rest."""
+    bucket catches the rest.
+
+    Histograms are *mergeable*: ``merge`` sums two histograms with identical
+    bounds without losing percentile fidelity (bucket counts add exactly),
+    and ``to_dict``/``from_dict`` round-trip one through JSON — the shape a
+    benchmark needs to sum per-lap registry snapshots, and the shape the SLO
+    tracker needs to window deltas of a cumulative histogram."""
 
     __slots__ = ("name", "_lock", "bounds", "counts", "count", "total", "vmin", "vmax")
 
-    def __init__(self, name: str, lock: threading.RLock, bounds=DEFAULT_MS_BUCKETS):
+    def __init__(self, name: str, lock: threading.RLock | None = None,
+                 bounds=DEFAULT_MS_BUCKETS):
         assert list(bounds) == sorted(bounds) and len(bounds) >= 1, bounds
         self.name = name
-        self._lock = lock
+        # standalone use (merge accumulators, windowed deltas) gets a private
+        # lock; registry-owned histograms share the registry lock
+        self._lock = lock if lock is not None else threading.RLock()
         self.bounds = tuple(float(b) for b in bounds)
         self.counts = [0] * (len(self.bounds) + 1)  # +1 overflow
         self.count = 0
@@ -170,6 +179,11 @@ class Histogram:
             "p50": round(self.percentile(50), 4),
             "p95": round(self.percentile(95), 4),
             "p99": round(self.percentile(99), 4),
+            # full serde fields: bounds + dense counts make the snapshot
+            # self-describing, so Histogram.from_dict can rebuild (and
+            # merge()) a histogram from any registry snapshot or wire copy
+            "bounds": list(self.bounds),
+            "counts": list(self.counts),
             "buckets": {
                 ("le_%g" % b if i < len(self.bounds) else "inf"): c
                 for i, (b, c) in enumerate(
@@ -178,6 +192,70 @@ class Histogram:
                 if c
             },
         }
+
+    to_dict = snapshot
+
+    @classmethod
+    def from_dict(cls, d: dict, name: str = "") -> "Histogram":
+        """Rebuild a standalone (private-lock) histogram from ``to_dict()`` /
+        ``snapshot()`` output. min/max fall back to bucket edges when absent
+        (a windowed delta has no exact extrema)."""
+        h = cls(name or d.get("name", ""), None, d["bounds"])
+        counts = [int(c) for c in d["counts"]]
+        if len(counts) != len(h.counts):
+            raise ValueError(
+                f"counts length {len(counts)} != bounds+1 ({len(h.counts)})"
+            )
+        h.counts = counts
+        h.count = int(d.get("count", sum(counts)))
+        h.total = float(d.get("sum", 0.0))
+        h.vmin = d.get("min")
+        h.vmax = d.get("max")
+        h._derive_extrema()
+        return h
+
+    def _derive_extrema(self) -> None:
+        """Fill missing vmin/vmax from the occupied bucket edges so the
+        percentile interpolation stays well-defined."""
+        if not self.count:
+            return
+        occupied = [i for i, c in enumerate(self.counts) if c]
+        if self.vmin is None:
+            i = occupied[0]
+            self.vmin = self.bounds[i - 1] if i > 0 else 0.0
+        if self.vmax is None:
+            i = occupied[-1]
+            self.vmax = self.bounds[min(i, len(self.bounds) - 1)]
+
+    def merge(self, other: "Histogram | dict") -> "Histogram":
+        """Fold ``other`` (a Histogram, or a ``to_dict()``/``snapshot()``
+        dict) into this histogram in place; returns self. Bucket counts add
+        exactly, so percentiles of a merged histogram have the same fidelity
+        as if every sample had been observed here — the associativity a
+        per-lap benchmark accumulator needs. Bounds must match."""
+        if isinstance(other, dict):
+            other = Histogram.from_dict(other)
+        if tuple(other.bounds) != self.bounds:
+            raise ValueError(
+                f"cannot merge histograms with different bounds "
+                f"({self.name!r} vs {other.name!r})"
+            )
+        with self._lock:
+            for i, c in enumerate(other.counts):
+                self.counts[i] += c
+            self.count += other.count
+            self.total += other.total
+            if other.vmin is not None:
+                self.vmin = other.vmin if self.vmin is None else min(self.vmin, other.vmin)
+            if other.vmax is not None:
+                self.vmax = other.vmax if self.vmax is None else max(self.vmax, other.vmax)
+        return self
+
+    def state(self) -> tuple:
+        """Locked point-in-time read of the mutable fields — the delta
+        baseline a windowed consumer (SLO tracker) diffs against."""
+        with self._lock:
+            return (tuple(self.counts), self.count, self.total, self.vmin, self.vmax)
 
     def _reset(self) -> None:
         self.counts = [0] * (len(self.bounds) + 1)

@@ -31,9 +31,11 @@ from repro.obs import (
     new_request_id,
     spans_to_chrome,
     spans_to_jsonl,
+    trace_meta,
     validate_trace_jsonl,
     write_trace,
 )
+from repro.obs.export import LANE_STRIDE
 from repro.serve_gs import RenderServer
 
 from conftest import make_cam, make_scene
@@ -186,12 +188,15 @@ def test_exporters_jsonl_contract_and_chrome_lanes(tmp_path):
     chrome = spans_to_chrome(spans)
     events = chrome["traceEvents"]
     meta = [e for e in events if e["ph"] == "M"]
-    assert len(meta) == len(STAGES)  # one named lane per pipeline stage
+    # one named lane per pipeline stage, plus the overflow lane the unknown
+    # stage landed on
+    assert len(meta) == len(STAGES) + 1
     xs = {e["name"]: e for e in events if e["ph"] == "X"}
-    assert xs["render"]["tid"] == STAGES.index("render") + 1
-    assert xs["mystery_stage"]["tid"] == len(STAGES) + 1
+    assert xs["render"]["tid"] == (STAGES.index("render") + 1) * LANE_STRIDE
+    assert xs["mystery_stage"]["tid"] == (len(STAGES) + 1) * LANE_STRIDE
     assert xs["admit"]["ts"] == 0.0  # rebased to the earliest span
     assert xs["render"]["dur"] == pytest.approx(0.2e6, rel=1e-3)
+    assert chrome["otherData"]["clock_domain"] == "monotonic"
 
     jsonl_path, chrome_path = write_trace(str(tmp_path / "t.jsonl"), spans)
     assert chrome_path.endswith(".chrome.json")
@@ -208,6 +213,36 @@ def test_exporters_jsonl_contract_and_chrome_lanes(tmp_path):
         with pytest.raises(ValueError, match=msg):
             validate_trace_jsonl(bad + "\n")
     assert validate_trace_jsonl("") == 0
+
+
+def test_chrome_overlapping_spans_spill_into_sublanes_and_meta_rides_along():
+    """Two render spans that overlap in time (a pipelined wave) must land on
+    DIFFERENT sub-lanes of the render block — they used to interleave into
+    one unreadable bar row — and the export header (drop accounting + knobs)
+    must survive both export formats."""
+    rec = TraceRecorder(capacity=2)
+    for i in range(3):  # capacity 2: the first span is lapped
+        rec.record(i, "render", 1.0 + 0.1 * i, 1.25 + 0.1 * i, batch=4)
+    spans = rec.spans()
+    meta = trace_meta(rec, knobs={"max_batch": 4})
+    assert meta["dropped"] == 1 and meta["capacity"] == 2
+
+    chrome = spans_to_chrome(spans, meta=meta)
+    xs = [e for e in chrome["traceEvents"] if e["ph"] == "X"]
+    base = (STAGES.index("render") + 1) * LANE_STRIDE
+    assert sorted(e["tid"] for e in xs) == [base, base + 1]  # overlap: 2 lanes
+    labels = {e["args"]["name"] for e in chrome["traceEvents"] if e["ph"] == "M"}
+    assert any(lbl.endswith("render#1") for lbl in labels)
+    assert chrome["otherData"]["knobs"] == {"max_batch": 4}
+    assert chrome["otherData"]["dropped"] == 1
+
+    n = validate_trace_jsonl(spans_to_jsonl(spans, meta=meta))
+    assert n == 2  # the meta line is not a span
+    assert n.dropped == 1 and n.capacity == 2 and n.knobs == {"max_batch": 4}
+    # meta anywhere but the first line is corruption, not data
+    bad = spans_to_jsonl(spans) + '{"trace_meta": {}}\n'
+    with pytest.raises(ValueError, match="first line"):
+        validate_trace_jsonl(bad)
 
 
 # ===================================================== zero-cost-when-off
@@ -488,3 +523,26 @@ def test_metrics_message_round_trip_and_unified_reset_windows(traced_gt):
     assert snap3["server.completed"] == 1
     assert snap3["server.render_calls"] == 0  # no re-render happened
     assert snap3["server.full_hits"] == 1
+
+
+def test_slo_state_is_visible_over_the_wire():
+    """A gateway started with an SLO target must surface the tracker's state
+    in BOTH wire surfaces: the protocol-v2 `metrics` message and the `stats`
+    report — a real-TCP regression for the ops loop (dashboards watch the
+    metrics message, humans read stats)."""
+    mgr = _obs_manager(timeline_steps=0)
+    mgr.warmup()
+    gw = Gateway(mgr, port=0, queue_limit=8,
+                 slo={"p99_ms": 2000.0, "window_s": 60.0})
+    with GatewayThread(gw) as gt:
+        with FrontendClient("127.0.0.1", gt.port) as cl:
+            for i in range(3):
+                cl.render("static", make_cam(H, W, dist=2.2 + 0.2 * i))
+            slo = cl.metrics()["slo"]
+            assert slo["state"] == "ok"  # 2s budget: smoke renders can't breach
+            assert slo["target_p99_ms"] == 2000.0
+            assert slo["window_count"] >= 1
+            assert slo["window_p99_ms"] is not None
+            stats = cl.stats()
+    assert stats["gateway"]["slo"]["state"] == "ok"
+    assert stats["gateway"]["slo"]["burn"] == 0.0
