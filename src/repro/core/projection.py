@@ -12,6 +12,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import gaussians as G
 
@@ -115,6 +116,85 @@ def project(
         axis=-1,
     )
     return packed
+
+
+def project_bounds_np(
+    g: G.GaussianModel,
+    cam: Camera,
+    idx: np.ndarray | None = None,
+    *,
+    near: float = 0.01,
+    blur: float = 0.3,
+    max_radius: float = 1e4,
+    rel_pad: float = 1e-3,
+    pad_px: float = 1.0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Conservative host-side screen bounds for a subset of Gaussians.
+
+    Float64 numpy mirror of :func:`project`'s (mean_x, mean_y, radius) math
+    — the only splat quantities tile binning looks at — for world-space
+    invalidation: the serving stack maps changed Gaussians to the screen
+    tiles they can touch without a device round-trip. Returns ``(mx, my,
+    rad)`` with ``rad == 0`` for Gaussians the rasterizer would cull.
+
+    Conservatism, not bit-equality, is the contract: the jitted f32 path
+    rounds differently, so every radius is padded by ``rel_pad``
+    (relative) plus ``pad_px`` pixels, and the near-plane cut keeps a
+    slack band of splats the f32 test might admit. A Gaussian outside the
+    padded bound here is guaranteed outside the rasterizer's bound.
+    """
+    means = np.asarray(g.means, np.float64)
+    log_scales = np.asarray(g.log_scales, np.float64)
+    quats = np.asarray(g.quats, np.float64)
+    if idx is not None:
+        sel = np.asarray(idx).reshape(-1)
+        means, log_scales, quats = means[sel], log_scales[sel], quats[sel]
+    vm = np.asarray(cam.viewmat, np.float64)
+    R, tvec = vm[:3, :3], vm[:3, 3]
+    p_cam = means @ R.T + tvec
+    x, y, z = p_cam[:, 0], p_cam[:, 1], p_cam[:, 2]
+    valid = z > near * (1.0 - 1e-4)  # slack: admit what f32 might admit
+    zc = np.where(valid, z, 1.0)
+
+    fx = float(np.asarray(cam.fx))
+    fy = float(np.asarray(cam.fy))
+    mx = fx * x / zc + float(np.asarray(cam.cx))
+    my = fy * y / zc + float(np.asarray(cam.cy))
+
+    # world covariance R S S^T R^T (gaussians.quat_to_rotmat / covariance3d)
+    q = quats / (np.linalg.norm(quats, axis=-1, keepdims=True) + 1e-12)
+    w, qx, qy, qz = q[:, 0], q[:, 1], q[:, 2], q[:, 3]
+    rot = np.empty((q.shape[0], 3, 3), np.float64)
+    rot[:, 0, 0] = 1 - 2 * (qy * qy + qz * qz)
+    rot[:, 0, 1] = 2 * (qx * qy - w * qz)
+    rot[:, 0, 2] = 2 * (qx * qz + w * qy)
+    rot[:, 1, 0] = 2 * (qx * qy + w * qz)
+    rot[:, 1, 1] = 1 - 2 * (qx * qx + qz * qz)
+    rot[:, 1, 2] = 2 * (qy * qz - w * qx)
+    rot[:, 2, 0] = 2 * (qx * qz - w * qy)
+    rot[:, 2, 1] = 2 * (qy * qz + w * qx)
+    rot[:, 2, 2] = 1 - 2 * (qx * qx + qy * qy)
+    RS = rot * np.exp(log_scales)[:, None, :]
+    cov3d = RS @ np.swapaxes(RS, -1, -2)
+
+    inv_z = 1.0 / zc
+    J = np.zeros((means.shape[0], 2, 3), np.float64)
+    J[:, 0, 0] = fx * inv_z
+    J[:, 0, 2] = -fx * x * inv_z * inv_z
+    J[:, 1, 1] = fy * inv_z
+    J[:, 1, 2] = -fy * y * inv_z * inv_z
+    JW = J @ R
+    cov2d = JW @ cov3d @ np.swapaxes(JW, -1, -2)
+    a = cov2d[:, 0, 0] + blur
+    b = cov2d[:, 0, 1]
+    c = cov2d[:, 1, 1] + blur
+    det = np.maximum(a * c - b * b, 1e-12)
+    mid = 0.5 * (a + c)
+    lam1 = mid + np.sqrt(np.maximum(mid * mid - det, 0.0))
+    rad = np.minimum(np.ceil(3.0 * np.sqrt(np.maximum(lam1, 0.0))), max_radius)
+    rad = rad * (1.0 + rel_pad) + pad_px
+    rad = np.where(valid, rad, 0.0)
+    return mx, my, rad
 
 
 def sort_by_depth(packed: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -84,21 +84,37 @@ class AsyncFrontendClient:
 
     # -------------------------------------------------------------- requests
     async def submit_render(
-        self, stream: str, cam: Camera, *, timestep: int = 0
+        self, stream: str, cam: Camera, *, timestep: int = 0,
+        gaze: tuple | None = None, budget_ms: float | None = None,
     ) -> asyncio.Future:
-        """Fire one render; returns the future (fire-many, await-later)."""
+        """Fire one render; returns the future (fire-many, await-later).
+
+        ``gaze`` (normalized (x, y) in [0, 1]) and ``budget_ms`` are the
+        optional foveated-serving hints: the engine sharpens the gazed tile
+        rows and coarsens the periphery to fit the render-time budget. Both
+        ride as optional header fields a v1 gateway simply ignores."""
         seq = next(self._seq)
         fut = asyncio.get_running_loop().create_future()
         self._pending[seq] = {"kind": "render", "fut": fut}
-        await proto.write_message(self._writer, {
+        header = {
             "type": proto.RENDER, "seq": seq, "stream": stream,
             "timestep": int(timestep), "camera": proto.camera_to_wire(cam),
-        })
+        }
+        if gaze is not None:
+            header["gaze"] = [float(gaze[0]), float(gaze[1])]
+        if budget_ms is not None:
+            header["budget_ms"] = float(budget_ms)
+        await proto.write_message(self._writer, header)
         return fut
 
-    async def render(self, stream: str, cam: Camera, *, timestep: int = 0) -> np.ndarray:
+    async def render(
+        self, stream: str, cam: Camera, *, timestep: int = 0,
+        gaze: tuple | None = None, budget_ms: float | None = None,
+    ) -> np.ndarray:
         """One frame (uint8 HxWx3). Raises ShedError if load-shed."""
-        return await (await self.submit_render(stream, cam, timestep=timestep))
+        return await (await self.submit_render(
+            stream, cam, timestep=timestep, gaze=gaze, budget_ms=budget_ms
+        ))
 
     async def scrub(self, stream: str, cam: Camera, timesteps: list[int]) -> dict[int, np.ndarray]:
         """One camera across ``timesteps``; returns {timestep: frame}.
@@ -235,8 +251,13 @@ class FrontendClient:
     def streams(self) -> dict:
         return self._cl.streams
 
-    def render(self, stream: str, cam: Camera, *, timestep: int = 0) -> np.ndarray:
-        return self._call(self._cl.render(stream, cam, timestep=timestep))
+    def render(
+        self, stream: str, cam: Camera, *, timestep: int = 0,
+        gaze: tuple | None = None, budget_ms: float | None = None,
+    ) -> np.ndarray:
+        return self._call(self._cl.render(
+            stream, cam, timestep=timestep, gaze=gaze, budget_ms=budget_ms
+        ))
 
     def scrub(self, stream: str, cam: Camera, timesteps: list[int]) -> dict[int, np.ndarray]:
         return self._call(self._cl.scrub(stream, cam, timesteps))

@@ -129,6 +129,9 @@ class FrameEncoder:
         self._store: dict[str, dict[bytes, int]] = {}
         self._ring: dict[str, list[bytes]] = {}
         self._slot: dict[str, int] = {}
+        # tile rows a partial reset marked dirty: their tiles ship (or ref)
+        # on the next frame even when the pixel diff is zero
+        self._force_rows: dict[str, set[int]] = {}
         self.raw_frames = 0
         self.delta_frames = 0
         self.tile_frames = 0
@@ -136,6 +139,7 @@ class FrameEncoder:
         self.tiles_total = 0     # tiles considered across tile frames
         self.tiles_shipped = 0   # tiles whose pixels went on the wire
         self.tiles_reffed = 0    # tiles sent as store references (no pixels)
+        self.tiles_forced = 0    # tiles included only because a row was forced
         self.bytes_raw = 0       # what raw-only would have cost
         self.bytes_sent = 0
 
@@ -158,13 +162,20 @@ class FrameEncoder:
     ) -> tuple[dict, bytes, list[bytes]]:
         th, tw = self.tile
         grid = tile_grid(q.shape[0], q.shape[1], th, tw)
+        tiles_x = -(-q.shape[1] // tw)
+        forced = self._force_rows.get(stream) or ()
         diff = q - last  # uint8 arithmetic wraps mod 256: exact on decode
         store = self._store.get(stream, {})
         changed, refs, parts, staged = [], [], [], []
         for ti, (ys, xs) in enumerate(grid):
             d = diff[ys, xs]
             if not d.any():
-                continue
+                # a forced (invalidated) row's tiles ship anyway: the zero
+                # diff decodes bit-exactly, and the client's copy is re-keyed
+                # instead of silently assumed current
+                if ti // tiles_x not in forced:
+                    continue
+                self.tiles_forced += 1
             digest = self._digest(q[ys, xs])
             slot = store.get(digest)
             if slot is not None:
@@ -247,19 +258,39 @@ class FrameEncoder:
             meta["encoding"] = RAW8
             self.raw_frames += 1
         self._last[stream] = q
+        # any shipped frame covers the forced rows (raw and zdelta8 carry the
+        # whole frame; tiles8 included them above): the mark is consumed
+        self._force_rows.pop(stream, None)
         self.bytes_raw += q.nbytes
         self.bytes_sent += len(payload)
         return meta, payload
 
-    def reset(self, stream: str | None = None) -> None:
+    def reset(self, stream: str | None = None, *, rows=None) -> None:
         """Drop delta state (one stream, or all): next frame is a keyframe.
         The tile store survives — its content stays bit-exact regardless of
         why the chain was cut, and the header's ``slot0`` keeps both ends'
-        rings aligned across the reset."""
+        rings aligned across the reset.
+
+        ``rows`` (tiles8 chains only) is the partial reset: instead of
+        cutting the chain, the given tile rows are marked dirty so the next
+        frame ships (or store-refs) their tiles even where the pixel diff is
+        zero — the client's copies of exactly the invalidated rows get
+        re-keyed while the rest of the frame stays delta-coded. Falls back to
+        the full reset when the stream has no chain to patch or the encoder
+        is not in tiles mode."""
+        if rows is not None and stream is not None:
+            rows = {int(r) for r in rows}
+            if self.tiles and stream in self._last and rows:
+                self._force_rows.setdefault(stream, set()).update(rows)
+                return
+            if not rows:
+                return  # nothing dirty: the chain is intact
         if stream is None:
             self._last.clear()
+            self._force_rows.clear()
         else:
             self._last.pop(stream, None)
+            self._force_rows.pop(stream, None)
 
     def stats(self) -> dict:
         return {
@@ -272,6 +303,7 @@ class FrameEncoder:
             "tiles_total": self.tiles_total,
             "tiles_shipped": self.tiles_shipped,
             "tiles_reffed": self.tiles_reffed,
+            "tiles_forced": self.tiles_forced,
             "tiles_shipped_frac": round(self.tiles_shipped / self.tiles_total, 4)
             if self.tiles_total
             else None,

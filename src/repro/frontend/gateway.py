@@ -101,6 +101,7 @@ class Gateway:
         self._c_delivery_errors = m.counter("gateway.delivery_errors")
         self._c_engine_errors = m.counter("gateway.engine_errors")
         self._c_delta_resets = m.counter("gateway.delta_resets")
+        self._c_partial_resets = m.counter("gateway.partial_resets")
         self._c_bytes_out = m.counter("gateway.bytes_out")
         self._c_waves = m.counter("gateway.waves")
         self._c_connections = m.counter("gateway.connections_total")
@@ -155,8 +156,13 @@ class Gateway:
 
     @property
     def delta_resets(self) -> int:
-        """Stream invalidations -> forced keyframes."""
+        """Full-stream invalidations -> forced keyframes."""
         return self._c_delta_resets.value
+
+    @property
+    def partial_resets(self) -> int:
+        """Row-granular invalidations -> forced tile rows (chain kept)."""
+        return self._c_partial_resets.value
 
     @property
     def bytes_out(self) -> int:
@@ -363,6 +369,16 @@ class Gateway:
             resolved = [
                 (int(t), self.manager.resolve(stream_id, t)) for t in timesteps
             ]
+            # optional foveation hints (protocol v2 extras, both may be absent)
+            budget_ms = header.get("budget_ms")
+            if budget_ms is not None:
+                budget_ms = float(budget_ms)
+                if not budget_ms > 0:
+                    raise ValueError("budget_ms must be > 0")
+            gaze = header.get("gaze")
+            if gaze is not None:
+                gx, gy = (float(v) for v in gaze)
+                gaze = (min(max(gx, 0.0), 1.0), min(max(gy, 0.0), 1.0))
         except (proto.ProtocolError, KeyError, TypeError, ValueError) as e:
             # malformed fields (non-int timesteps included) answer with a
             # bad_request frame instead of killing the connection handler
@@ -387,6 +403,7 @@ class Gateway:
                 global_ts=global_ts, cam=cam, t_admit=_now(),
                 scrub_last=i == len(resolved) - 1, bulk=bulk,
                 request_id=new_request_id(),
+                budget_ms=budget_ms, gaze=gaze,
             )
             if rec:
                 rec.record(pr.request_id, "admit", pr.t_admit,
@@ -487,13 +504,19 @@ class Gateway:
     async def _deliver_inner(self, results: list) -> None:
         loop = asyncio.get_running_loop()
         # a cache invalidation (model hot-swap, dirty-row drop) marks its
-        # stream dirty: reset every session's delta chain for it BEFORE this
-        # wave encodes, so the first post-update frame ships as a keyframe
-        # rather than extending a chain rooted in superseded content
-        for sid in self.manager.take_dirty():
-            self._c_delta_resets.inc()
+        # stream dirty: patch every session's delta chain for it BEFORE this
+        # wave encodes. Row-granular invalidations (world-space dirty tiles)
+        # only force the affected tile rows onto the wire — the chain stays
+        # intact elsewhere; a full invalidation (rows=None) still cuts the
+        # chain so the first post-update frame ships as a keyframe rather
+        # than extending one rooted in superseded content
+        for sid, rows in self.manager.take_dirty().items():
+            if rows is None:
+                self._c_delta_resets.inc()
+            else:
+                self._c_partial_resets.inc()
             for s in list(self._sessions.values()):
-                s.encoder.reset(sid)
+                s.encoder.reset(sid, rows=rows)
         t1 = _now()
         # One executor hop encodes the WHOLE wave (per-frame hops cost a
         # thread wakeup + loop wakeup each — measurable at localhost rates).
@@ -572,6 +595,7 @@ class Gateway:
                     pr.cam, timestep=pr.global_ts, client_id=pr.session.session_id,
                     t_submit=pr.t_admit,
                     request_id=pr.request_id if pr.request_id >= 0 else None,
+                    gaze=pr.gaze, budget_ms=pr.budget_ms,
                 )))
             except Exception as e:  # bad state (e.g. closing): fail just this one
                 out.append((pr, None, e))
@@ -637,6 +661,7 @@ class Gateway:
                 "delivery_errors": g("delivery_errors"),
                 "engine_errors": g("engine_errors"),
                 "delta_resets": g("delta_resets"),
+                "partial_resets": g("partial_resets"),
                 "bytes_out": g("bytes_out"),
                 "waves": g("waves"),
                 "queue_limit": self.queue_limit,

@@ -38,6 +38,12 @@ encodings it will actually use. Protocol v2 adds the ``tiles8``
 changed-tile frame encoding (see ``encode.py``); a v1 peer (or a hello with
 no ``protocol`` field) falls back to the v1 ``zdelta8``/``rgb8`` wire
 format, so old clients keep working against new gateways and vice versa.
+
+``render``/``scrub`` headers may additionally carry two OPTIONAL foveated-
+serving hints — ``gaze`` (normalized ``[x, y]`` in [0, 1]) and
+``budget_ms`` (positive float render-time budget). Absent fields mean
+uniform-LOD serving, and old gateways ignore unknown header fields, so
+these ride within PROTOCOL 2 rather than bumping it.
 """
 from __future__ import annotations
 

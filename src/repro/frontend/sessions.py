@@ -68,10 +68,12 @@ class SessionManager:
         self.streams: dict[str, StreamInfo] = {}
         self._next_base = 0
         # streams whose cached content was invalidated since the last
-        # take_dirty(): the gateway resets their wire delta chains, so the
-        # next frame after a model update is a fresh keyframe. Set on the
-        # render-executor thread, drained on the loop thread -> locked.
-        self._dirty_streams: set[str] = set()
+        # take_dirty(), mapped to the dirty tile rows (None = whole frame):
+        # the gateway resets their wire delta chains — row-granular when the
+        # server computed exact dirty tiles, so the next frame re-keys only
+        # those tiles on the wire. Set on the render-executor thread, drained
+        # on the loop thread -> locked.
+        self._dirty_streams: dict[str, set[int] | None] = {}
         self._dirty_lock = threading.Lock()
 
     # ------------------------------------------------------------- register
@@ -133,19 +135,34 @@ class SessionManager:
         return {sid: info.describe() for sid, info in self.streams.items()}
 
     # --------------------------------------------------------- invalidation
-    def _on_invalidate(self, global_ts: int) -> None:
+    def _on_invalidate(self, global_ts: int, rows=None) -> None:
         """Server invalidation listener: map the global timeline position
-        back to its stream and mark its wire delta chains dirty."""
+        back to its stream and mark its wire delta chains dirty. ``rows`` is
+        the server's dirty tile-row set (None = whole frame); repeated
+        invalidations before a drain accumulate — a None anywhere dominates
+        (full reset), row sets union."""
+        if rows is not None and not rows:
+            return  # nothing dropped: wire chains stay valid
         for sid, info in self.streams.items():
             if info.base <= global_ts < info.base + STREAM_STRIDE:
                 with self._dirty_lock:
-                    self._dirty_streams.add(sid)
+                    if sid in self._dirty_streams:
+                        prev = self._dirty_streams[sid]
+                        if prev is None or rows is None:
+                            self._dirty_streams[sid] = None
+                        else:
+                            prev.update(int(r) for r in rows)
+                    else:
+                        self._dirty_streams[sid] = (
+                            None if rows is None else {int(r) for r in rows}
+                        )
                 return
 
-    def take_dirty(self) -> set[str]:
-        """Pop the streams invalidated since the last call (gateway loop)."""
+    def take_dirty(self) -> dict[str, set[int] | None]:
+        """Pop the streams invalidated since the last call (gateway loop):
+        stream id -> dirty tile rows, or None for a whole-frame reset."""
         with self._dirty_lock:
-            dirty, self._dirty_streams = self._dirty_streams, set()
+            dirty, self._dirty_streams = self._dirty_streams, {}
         return dirty
 
     def invalidate(self, stream_id: str, timestep: int = 0, *, rows=None) -> int:
@@ -210,6 +227,9 @@ class PendingRender:
     scrub_last: bool = False  # final item of a scrub fan-out
     bulk: bool = False        # part of a multi-item (scrub) admission unit
     request_id: int = -1      # obs id minted at admit; joins the span tree
+    # optional foveated-serving hints, passed through to the engine verbatim
+    budget_ms: float | None = None
+    gaze: tuple | None = None  # normalized (x, y) in [0, 1]
 
 
 class Session:

@@ -11,7 +11,7 @@ fixed-capacity Gaussian model tracking the isosurface:
 See ``repro.launch.insitu`` for the CLI driver and
 ``benchmarks/insitu_throughput.py`` for the warm-vs-cold methodology.
 """
-from repro.insitu.serve import build_timeline_server, scrub, timeline_stream
+from repro.insitu.serve import build_timeline_server, replay_live, scrub, timeline_stream
 from repro.insitu.store import TemporalCheckpointStore
 from repro.insitu.trainer import (
     InsituTrainer,
@@ -26,6 +26,7 @@ __all__ = [
     "TimestepReport",
     "build_timeline_server",
     "fixed_capacity_init",
+    "replay_live",
     "reseed_dead_slots",
     "scrub",
     "timeline_stream",

@@ -34,6 +34,37 @@ def build_timeline_server(
     return server
 
 
+def replay_live(
+    store: TemporalCheckpointStore,
+    server: RenderServer,
+    *,
+    timesteps: list[int] | None = None,
+    serve_timestep: int = 0,
+    on_timestep=None,
+):
+    """Replay a stored sequence through ONE live timeline slot.
+
+    The post hoc twin of ``InsituTrainer.run(server=...)``: each stored
+    timestep re-registers ``serve_timestep`` with the slots the stored delta
+    encoding says changed (``store.changed_slots``), so the server's
+    world-space invalidation drops only the tiles those Gaussians can touch
+    under each cached pose — no caller row math. Keyframes (unknown change
+    set) fall back to a full drop. ``on_timestep(t)`` runs after each
+    registration (e.g. to submit viewer requests between updates).
+    """
+    ts = timesteps if timesteps is not None else store.timesteps()
+    assert ts, "temporal store is empty"
+    for t in ts:
+        params = store.load(t)
+        slots = store.changed_slots(t)
+        if slots is None or int(serve_timestep) not in server.timesteps():
+            server.add_timestep(int(serve_timestep), params)
+        else:
+            server.add_timestep(int(serve_timestep), params, changed=slots)
+        if on_timestep is not None:
+            on_timestep(t)
+
+
 def timeline_stream(manager, stream_id: str, store: TemporalCheckpointStore, *, timesteps=None):
     """Expose a stored insitu sequence as a scrubbable network stream.
 

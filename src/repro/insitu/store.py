@@ -279,6 +279,30 @@ class TemporalCheckpointStore:
                     frame[name] = x
         return G.GaussianModel(**frame)
 
+    def changed_slots(self, t: int) -> np.ndarray | None:
+        """Gaussian slots timestep ``t`` changed relative to ``t-1``, straight
+        from the stored delta encoding (no params diff): the union over leaves
+        of rows with a nonzero quantized delta plus the sparse exact-jump rows
+        (reseeded slots). Returns ``None`` for keyframes — a keyframe carries
+        no delta, so the change set is unknown and callers must assume
+        everything (exactly what ``RenderServer.add_timestep`` without
+        ``changed=`` does). Post hoc replay uses this to drive world-space
+        invalidation with zero trainer involvement.
+        """
+        self.flush()
+        i = self._entry(int(t))
+        e = self._index["timesteps"][i]
+        if e["kind"] == "key":
+            return None
+        rows: set[int] = set()
+        with np.load(os.path.join(self.directory, f"delta_{e['t']:08d}.npz")) as z:
+            for name in G.GaussianModel._fields:
+                q = z[name]
+                nz = np.nonzero(q.reshape(q.shape[0], -1).any(axis=1))[0]
+                rows.update(int(r) for r in nz)
+                rows.update(int(r) for r in z[name + "__jump_idx"])
+        return np.asarray(sorted(rows), np.int64)
+
     # ---------------------------------------------------------------- metrics
     def stats(self) -> dict:
         """On-disk footprint: delta frames vs keyframes (the compression win).

@@ -61,6 +61,12 @@ class TimestepReport:
     train_s: float            # optimization only
     n_traces: int             # cumulative train-step jit traces (must stay 1)
     psnr_curve: list = dataclasses.field(default_factory=list)  # [(step, psnr)]
+    # Gaussian slots this timestep rewrote (reseeded + optimizer-moved rows),
+    # diffed host-side against the previous timestep's params. None means
+    # unknown/everything (cold start) — exactly what a serving tier should
+    # assume. Feeds RenderServer.add_timestep(..., changed=...) so the
+    # trainer->server handoff needs no caller-side row math.
+    changed_slots: list | None = None
 
 
 def fixed_capacity_init(
@@ -91,7 +97,7 @@ def reseed_dead_slots(
     opacity_thresh: float = 0.005,
     max_fraction: float = 1.0,
     rng: np.random.Generator | None = None,
-) -> tuple[GSTrainState, int]:
+) -> tuple[GSTrainState, int, np.ndarray]:
     """Re-seed dead capacity from a fresh isosurface extraction (host-side).
 
     Dead = opacity below ``opacity_thresh`` (covers both padding at
@@ -99,7 +105,10 @@ def reseed_dead_slots(
     ``max_fraction`` of the dead slots are refilled with randomly sampled new
     surface points; their Adam moments and densify stats are zeroed so the
     optimizer treats them as newborn. Shapes are untouched — the caller's
-    jitted train step keeps its trace.
+    jitted train step keeps its trace. Returns ``(state, n_fill, slots)``
+    where ``slots`` are the refilled row indices (empty when nothing was
+    reseeded) — the world-space invalidation path wants them without
+    re-diffing the params.
     """
     rng = rng or np.random.default_rng(0)
     p = jax.tree_util.tree_map(np.asarray, state.params)
@@ -109,7 +118,7 @@ def reseed_dead_slots(
     colors = np.asarray(colors, np.float32)
     n_fill = min(int(len(dead) * max_fraction), points.shape[0])
     if n_fill == 0:
-        return state, 0
+        return state, 0, np.zeros(0, np.int64)
     slots = dead[rng.choice(len(dead), n_fill, replace=False)] if n_fill < len(dead) else dead
     pick = rng.choice(points.shape[0], n_fill, replace=False)
 
@@ -148,7 +157,7 @@ def reseed_dead_slots(
         vis_count=jnp.asarray(stats[1]),
         max_radii=jnp.asarray(stats[2]),
     )
-    return new_state, n_fill
+    return new_state, n_fill, np.sort(np.asarray(slots, np.int64))
 
 
 class InsituTrainer:
@@ -279,7 +288,9 @@ class InsituTrainer:
         assert self.state is not None, "advance() before start()"
         t0 = time.time()
         pts, _, cols = extract_isosurface_points(vol, max_points=self.max_points)
-        self.state, n_reseeded = reseed_dead_slots(
+        # params before reseed+training: the diff baseline for changed_slots
+        prev_params = jax.tree_util.tree_map(np.asarray, self.state.params)
+        self.state, n_reseeded, _ = reseed_dead_slots(
             self.state,
             pts,
             cols,
@@ -288,15 +299,26 @@ class InsituTrainer:
             rng=self.rng,
         )
         self.state = jax.device_put(self.state, state_shardings(self.mesh))
-        rep = self._absorb(vol, pts, cols, n_reseeded, steps or self.warm_steps, "warm", t0)
+        rep = self._absorb(
+            vol, pts, cols, n_reseeded, steps or self.warm_steps, "warm", t0,
+            prev_params=prev_params,
+        )
         return rep
 
-    def _absorb(self, vol, pts, cols, n_reseeded, steps, mode, t0) -> TimestepReport:
+    def _absorb(self, vol, pts, cols, n_reseeded, steps, mode, t0, prev_params=None) -> TimestepReport:
         data = self._dataset(vol)
         p_before = self._eval_psnr(data)
         ttrain = time.time()
         loss, curve = self._fit(data, steps, psnr0=p_before)
         train_s = time.time() - ttrain
+        changed = None
+        if prev_params is not None:
+            # one host-side diff covers reseeded slots AND optimizer-moved
+            # rows: everything the serving tier must treat as dirty
+            from repro.serve_gs.footprint import changed_indices
+
+            now_params = jax.tree_util.tree_map(np.asarray, self.state.params)
+            changed = [int(i) for i in changed_indices(prev_params, now_params)]
         rep = TimestepReport(
             t_index=self.t_index,
             name=vol.name,
@@ -311,6 +333,7 @@ class InsituTrainer:
             train_s=train_s,
             n_traces=self.n_traces,
             psnr_curve=curve,
+            changed_slots=changed,
         )
         self.reports.append(rep)
         self.t_index += 1
@@ -322,15 +345,24 @@ class InsituTrainer:
             )
         return rep
 
-    def run(self, stream, *, store=None) -> list[TimestepReport]:
+    def run(self, stream, *, store=None, server=None, serve_timestep=0) -> list[TimestepReport]:
         """Consume a ``VolumeStream``; optionally append each timestep's
-        params to a ``TemporalCheckpointStore``.
+        params to a ``TemporalCheckpointStore`` and/or push each timestep to
+        a live ``RenderServer``.
 
         With the store's default asynchronous writer, ``append`` only pulls
         params to host and enqueues the encode+write — delta quantization and
         compression overlap with the *next* timestep's training instead of
         stalling the stream. The store is flushed before returning, so every
         appended timestep is durable when ``run`` hands back its reports.
+
+        ``server`` wires the live-viewing loop with **no caller-side row
+        math**: after each timestep the model is re-registered on the
+        server's ``serve_timestep`` timeline slot with this timestep's
+        ``changed_slots``, so the server computes per-pose dirty tile rows
+        itself from the changed Gaussians' projected bounds (cold start
+        passes no ``changed`` and drops everything, which is vacuous on the
+        first registration).
         """
         out = []
         for vol in stream:
@@ -338,6 +370,15 @@ class InsituTrainer:
             out.append(rep)
             if store is not None:
                 store.append(rep.t_index, self.state.params)
+            if server is not None:
+                params = jax.tree_util.tree_map(np.asarray, self.state.params)
+                if rep.changed_slots is None:
+                    server.add_timestep(int(serve_timestep), params)
+                else:
+                    server.add_timestep(
+                        int(serve_timestep), params,
+                        changed=np.asarray(rep.changed_slots, np.int64),
+                    )
         if store is not None:
             store.flush()
         return out

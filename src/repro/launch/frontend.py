@@ -46,7 +46,8 @@ def synthetic_timeline(params, n_steps: int, *, drift: float = 0.08) -> dict:
 
 
 def self_test(host: str, port: int, *, scrub_stream: str | None) -> dict:
-    """Connect like a real remote viewer; one render per stream + a scrub."""
+    """Connect like a real remote viewer; one render per stream + a scrub,
+    plus one foveated render (gaze hint) exercising the per-tile LOD path."""
     with FrontendClient(host, port) as cl:
         h, w = cl.hello["img_h"], cl.hello["img_w"]
         cam_by_stream = {}
@@ -59,6 +60,11 @@ def self_test(host: str, port: int, *, scrub_stream: str | None) -> dict:
             frame = cl.render(sid, cam, timestep=info["timesteps"][0])
             rendered[sid] = list(frame.shape)
             assert frame.shape == (h, w, 3) and frame.dtype == np.uint8, frame.shape
+        # foveated render: gaze at the top edge so the lower rows coarsen
+        sid0, info0 = next(iter(cl.streams.items()))
+        fov = cl.render(sid0, cam_by_stream[sid0], timestep=info0["timesteps"][0],
+                        gaze=(0.5, 0.0))
+        assert fov.shape == (h, w, 3), fov.shape
         scrubbed = 0
         if scrub_stream is not None:
             ts = cl.streams[scrub_stream]["timesteps"]
@@ -179,6 +185,10 @@ def main(argv=None):
             gw = out["stats"]["gateway"]
             assert gw["protocol_errors"] == 0 and gw["shed"] == 0, gw
             assert gw["frames_sent"] >= len(manager.streams), gw
+            # per-tile LOD accounting reached the report (foveated or uniform,
+            # every request assigns each tile row a level)
+            lod = out["stats"]["server"]["lod"]
+            assert sum(lod["rows_per_level"]) > 0, lod
             print(f"frontend smoke ok: {gw['frames_sent']} frames over TCP, "
                   f"{gw['bytes_out']} bytes, 0 shed")
         elif args.serve_seconds > 0:

@@ -26,7 +26,13 @@ import jax
 import numpy as np
 
 from repro.core.config import GSConfig
-from repro.insitu import InsituTrainer, TemporalCheckpointStore, build_timeline_server, scrub
+from repro.insitu import (
+    InsituTrainer,
+    TemporalCheckpointStore,
+    build_timeline_server,
+    replay_live,
+    scrub,
+)
 from repro.serve_gs import front_camera
 from repro.volume.timevary import GENERATORS, synthetic_stream
 
@@ -61,6 +67,37 @@ def scrub_smoke(
             "replay_new_misses": server.cache.misses - misses_first,
             "pipeline": server.report()["pipeline"],
             "timeline": server.report()["timeline"],
+        }
+
+
+def live_replay_smoke(store: TemporalCheckpointStore, cfg: GSConfig) -> dict:
+    """Live-update smoke: replay the stored sequence through ONE serving
+    slot. The store's per-timestep changed slots drive world-space
+    invalidation — after the first viewer pose registers, later updates
+    should drop only the tile rows the changed Gaussians can touch (partial
+    invalidations), not the whole frame."""
+    ts = store.timesteps()
+    events: list[int | None] = []  # None = full drop, int = dirty row count
+    with build_timeline_server(
+        store, cfg, timesteps=ts[:1], n_levels=2, max_batch=2, store_frames=False
+    ) as server:
+        server.add_invalidation_listener(
+            lambda t, rows: events.append(None if rows is None else len(rows))
+        )
+        cam = front_camera(server.pyramid, img_h=cfg.img_h, img_w=cfg.img_w)
+
+        def view(_t=None):
+            fut = server.submit(cam, timestep=ts[0])
+            server.run()
+            fut.result()
+
+        view()  # registers the pose the invalidator projects through
+        replay_live(store, server, timesteps=ts[1:], serve_timestep=ts[0], on_timestep=view)
+        return {
+            "updates": len(ts) - 1,
+            "invalidations": events,
+            "partial_invalidations": sum(1 for e in events if e is not None),
+            "full_invalidations": sum(1 for e in events if e is None),
         }
 
 
@@ -156,6 +193,8 @@ def main(argv=None):
             out["scrub"] = scrub_smoke(
                 store, cfg, n_scrub=min(3, args.timesteps), pipeline_depth=args.pipeline_depth
             )
+            if args.timesteps > 1:
+                out["live_replay"] = live_replay_smoke(store, cfg)
 
     txt = json.dumps(out, indent=1)
     print(txt)

@@ -11,6 +11,7 @@ methodology.
 from repro.serve_gs.batcher import MicroBatch, MicroBatcher, RenderRequest, stack_cameras
 from repro.serve_gs.cache import FrameCache, frame_key, quantize_camera, tile_key
 from repro.serve_gs.client import OrbitClient, make_clients, run_load
+from repro.serve_gs.footprint import changed_indices, dirty_row_map, dirty_rows
 from repro.serve_gs.lod import (
     LODPyramid,
     build_lod_pyramid,
@@ -18,6 +19,7 @@ from repro.serve_gs.lod import (
     importance_scores,
     screen_coverage,
     select_level,
+    select_level_map,
 )
 from repro.serve_gs.server import FrameFuture, RenderServer, TimestepModels
 
@@ -32,6 +34,9 @@ __all__ = [
     "RenderRequest",
     "RenderServer",
     "build_lod_pyramid",
+    "changed_indices",
+    "dirty_row_map",
+    "dirty_rows",
     "frame_key",
     "front_camera",
     "importance_scores",
@@ -40,6 +45,7 @@ __all__ = [
     "run_load",
     "screen_coverage",
     "select_level",
+    "select_level_map",
     "stack_cameras",
     "tile_key",
 ]

@@ -29,6 +29,7 @@ class RenderRequest:
     cache_key: tuple | None = None
     timestep: int = 0                    # timeline position (time-scrubbing)
     future: object | None = None         # FrameFuture delivering this frame
+    row_levels: tuple | None = None      # per-tile-row LOD map (foveated frames)
     # ids come from the process-wide obs mint so a request keeps one id from
     # gateway admit through batcher queueing to span export
     request_id: int = dataclasses.field(default_factory=new_request_id)

@@ -154,3 +154,52 @@ def select_level(pyr: LODPyramid, cam: Camera, *, img_w: int) -> int:
         return 0
     lvl = int(np.floor(np.log2(1.0 / max(cov, 1e-9))))
     return min(max(lvl, 0), pyr.n_levels - 1)
+
+
+def select_level_map(
+    pyr: LODPyramid,
+    cam: Camera,
+    *,
+    img_w: int,
+    tiles_y: int,
+    gaze_row: int | None = None,
+    budget_rows: float | None = None,
+    sharp_rows: int = 1,
+    n_levels: int | None = None,
+    keep_ratio: float = 0.5,
+) -> tuple[int, ...]:
+    """Per-tile-row LOD assignment: gaze rows sharp, peripheral rows coarse.
+
+    Generalizes :func:`select_level` from one level per frame to one level
+    per tile row. The coverage-derived level is the *floor* everywhere; rows
+    farther than ``sharp_rows`` from the gaze row coarsen one level per row
+    of distance (clamped to the pyramid depth ``n_levels``, which callers
+    pass as the actual built depth when shallower than ``pyr.n_levels``).
+
+    ``budget_rows`` is an approximate render budget in full-detail-row
+    units: rendering a row at level l costs ~``keep_ratio**l`` of a level-0
+    row (the pyramid keeps that fraction of Gaussians). When set, the
+    sharp-zone half-width shrinks until the summed cost fits — gracefully
+    degrading the periphery first, never the gaze row. With neither a gaze
+    hint nor a budget the map is uniform at the coverage level, matching the
+    legacy whole-frame behaviour bit for bit.
+    """
+    n = int(n_levels if n_levels is not None else pyr.n_levels)
+    base = min(select_level(pyr, cam, img_w=img_w), n - 1)
+    if n <= 1 or (gaze_row is None and budget_rows is None):
+        return (base,) * tiles_y
+    g = tiles_y // 2 if gaze_row is None else min(max(int(gaze_row), 0), tiles_y - 1)
+
+    def profile(s: int) -> tuple[int, ...]:
+        return tuple(min(base + max(abs(r - g) - s, 0), n - 1) for r in range(tiles_y))
+
+    if budget_rows is None:
+        return profile(max(int(sharp_rows), 0))
+    # widest sharp zone whose estimated cost fits the budget (s = tiles_y is
+    # the uniform-sharp frame, s = 0 degrades everything but the gaze row)
+    cost = lambda p: sum(keep_ratio**l for l in p)
+    for s in range(tiles_y, -1, -1):
+        p = profile(s)
+        if cost(p) <= budget_rows:
+            return p
+    return profile(0)

@@ -31,9 +31,14 @@ whose tiles are only *partially* cached renders **only the missing tile
 rows** (``make_tile_row_render`` strips, bit-identical to the same rows of
 the full-frame render) before assembling the frame. Partial hits arise from
 byte-budget eviction and — the paper's in situ story — from *partial
-invalidation*: ``add_timestep(..., dirty_rows=...)`` / ``invalidate`` drop
-only the screen rows a model update touched, so revisiting a pose after a
-localized simulation update re-renders a few rows instead of the frame.
+invalidation*: ``add_timestep(..., changed=<slot indices>)`` projects the
+changed Gaussians' conservative screen bounds through every cached pose and
+drops only the tile rows the update can touch (``dirty_rows=`` remains the
+manual escape hatch), so revisiting a pose after a localized simulation
+update re-renders a few rows instead of the frame. Requests may also opt
+into **foveated per-tile LOD** (``submit(..., gaze=, budget_ms=)``): tile
+rows get their own pyramid level, mixed-level frames assemble from the same
+per-(tile, level) cache entries uniform frames populate.
 ``tile_cache=False`` is the whole-frame baseline, preserved bit-for-bit.
 
 The server holds a *timeline*: timestep -> (LOD pyramid, device params).
@@ -68,8 +73,15 @@ from repro.serve_gs.batcher import (
     default_buckets,
     stack_cameras,
 )
-from repro.serve_gs.cache import ASSEMBLED, FrameCache, frame_key, tile_key
-from repro.serve_gs.lod import LODPyramid, build_lod_pyramid, front_camera, select_level
+from repro.serve_gs.cache import ASSEMBLED, FrameCache, frame_key, quantize_camera, tile_key
+from repro.serve_gs.footprint import changed_indices, dirty_row_map
+from repro.serve_gs.lod import (
+    LODPyramid,
+    build_lod_pyramid,
+    front_camera,
+    select_level,
+    select_level_map,
+)
 
 
 def _percentile(xs: list[float], q: float) -> float:
@@ -157,6 +169,10 @@ class _PartialJob:
     req: RenderRequest
     fut: "FrameFuture"
     tiles: list
+    # foveated frames: per-tile-row LOD levels and the uniform-level frame
+    # keys whose tile entries the rows share (None -> uniform at req.level)
+    row_levels: tuple | None = None
+    row_keys: tuple | None = None
 
 
 class TimestepModels(NamedTuple):
@@ -187,6 +203,7 @@ class RenderServer:
         frames_capacity: int = 256,
         pipeline_depth: int = 2,
         timestep: int = 0,
+        pose_registry_cap: int = 512,
         obs: Obs | None = None,
     ):
         self.cfg = cfg
@@ -242,6 +259,19 @@ class RenderServer:
         self._level_render = tuple(
             make_batched_eval_render(self.mesh, c) for c in self._level_cfgs
         )
+
+        # Pose registry: every pose that ever populated the tile cache, keyed
+        # by its quantized-camera signature (the pose part of the cache key).
+        # World-space invalidation projects changed Gaussians through these
+        # cameras to find each pose's dirty tile rows. Bounded LRU: an entry
+        # evicted here makes that pose's cached tiles *conservatively* dropped
+        # on the next world-space invalidation (unknown pose -> assume dirty).
+        self.pose_registry_cap = max(int(pose_registry_cap), 1)
+        self._poses: collections.OrderedDict[tuple, Camera] = collections.OrderedDict()
+        # EWMA of the wall cost of one level-0 tile row (ms), level-normalized
+        # (a level-l row counts as keep_ratio**l of a row); calibrates the
+        # budget_ms -> budget_rows mapping for foveated requests
+        self._row_cost_ms: float | None = None
 
         self._timeline: dict[int, TimestepModels] = {}
         self._first_timestep = int(timestep)
@@ -300,19 +330,30 @@ class RenderServer:
         self._frame_misses = m.counter("server.frame_misses")  # full render
         self._rows_rendered = m.counter("server.rows_rendered_partial")
         self._render_rows = m.counter("server.render_rows")
+        # ---- LOD metrics: per-level request/row tallies live in the shared
+        # registry (dotted names) so level decisions show up in snapshot()
+        # and traces; `level_requests` below keeps the historical list read.
+        self._c_level_requests = tuple(
+            m.counter(f"server.level_requests.l{lvl}") for lvl in range(n_levels)
+        )
+        self._c_lod_rows = tuple(
+            m.counter(f"server.lod_rows.l{lvl}") for lvl in range(n_levels)
+        )
+        self._c_foveated = m.counter("server.foveated_requests")
         # window state the registry can't hold (distributions over dynamic
         # key sets, window timestamps) — cleared by the same reset() via hook
         self._busy_until = 0.0  # end of the last retired in-flight window
-        self._level_requests = [0] * n_levels
         self._timestep_requests: dict[int, int] = {}
         self._t_first: float | None = None
         self._t_last: float | None = None
         m.on_reset(self._reset_window_state)
 
     def _reset_window_state(self) -> None:
-        """registry.reset() hook: clear the window state held outside it."""
+        """registry.reset() hook: clear the window state held outside it.
+        (``_timestep_requests`` stays host-side because its key set — the
+        timeline — is dynamic; the fixed-arity per-level tallies moved into
+        the registry as ``server.level_requests.l*`` / ``server.lod_rows.l*``.)"""
         self._busy_until = 0.0
-        self._level_requests = [0] * self.n_levels
         self._timestep_requests = {}
         self._t_first = self._t_last = None
 
@@ -344,6 +385,12 @@ class RenderServer:
     @property
     def render_rows(self) -> int:
         return self._render_rows.value
+
+    @property
+    def level_requests(self) -> list[int]:
+        """Per-level request tally (read-only view of the registry counters
+        ``server.level_requests.l*``; the historical attribute shape)."""
+        return [c.value for c in self._c_level_requests]
 
     # first-entry aliases — the pre-timeline (static scene) public surface;
     # properties so they track add_timestep() re-registering the first entry
@@ -378,24 +425,38 @@ class RenderServer:
 
     # --------------------------------------------------------------- timeline
     def add_timestep(
-        self, timestep: int, params: G.GaussianModel, *, dirty_rows=None
+        self, timestep: int, params: G.GaussianModel, *, changed=None, dirty_rows=None
     ) -> TimestepModels:
         """Register a model for one timeline position. Re-registering an
         existing timestep replaces the model AND invalidates its cached
         frames (stale frames must not outlive the model that rendered them).
 
-        ``dirty_rows`` (tile-cache servers only) is the in situ fast path: an
-        iterable of screen tile-row indices that the model update can affect.
-        Only those rows' cached tiles are dropped — every cached pose keeps
-        its clean tiles and the next request partial-renders just the dirty
-        rows. The CALLER asserts the contract: for every cached pose, the new
-        model must render bit-identically to the old one outside
-        ``dirty_rows`` (e.g. the changed Gaussians' projected footprints,
-        padded by their radii, stay inside those rows for every served pose).
+        ``changed`` is the in situ fast path and needs **no caller-side row
+        math**: pass the indices of the Gaussian slots the update rewrote
+        (or ``True`` to have the server diff old vs new parameters itself)
+        and the server projects those Gaussians' conservative screen bounds
+        — under the old *and* new parameters — through **every registered
+        cached pose** to compute the dirty tile rows per pose. Only those
+        tiles are dropped; clean tiles survive and the next request
+        partial-renders just the dirty rows. Poses missing from the bounded
+        registry (evicted) and non-tile-cache servers fall back to a full
+        drop of the timestep, so ``changed`` is always safe to pass.
+
+        ``dirty_rows`` is the legacy manual escape hatch (tile-cache servers
+        only): an explicit iterable of screen tile-row indices to drop for
+        every pose, for callers that computed the footprint themselves. The
+        two are mutually exclusive; omitting both drops the whole timestep.
         """
+        if changed is not None and dirty_rows is not None:
+            raise ValueError("pass either changed= or dirty_rows=, not both")
         cache = getattr(self, "cache", None)  # absent during __init__'s first entry
         if cache is not None and int(timestep) in self._timeline:
-            self.invalidate(timestep, rows=dirty_rows)
+            if dirty_rows is not None:
+                self.invalidate(timestep, rows=dirty_rows)
+            elif changed is not None:
+                self._invalidate_changed(timestep, self._timeline[int(timestep)], params, changed)
+            else:
+                self.invalidate(timestep)
         pyramid = build_lod_pyramid(
             params,
             n_levels=self.n_levels,
@@ -414,32 +475,103 @@ class RenderServer:
 
     # ----------------------------------------------------------- invalidation
     def add_invalidation_listener(self, cb) -> None:
-        """Register ``cb(timestep)`` to fire after any cache invalidation of
-        that timeline position (model replacement or explicit ``invalidate``).
-        The frontend uses this to reset per-stream delta-encode chains, so a
-        content change forces a fresh keyframe on the wire."""
+        """Register ``cb(timestep, rows)`` to fire after any cache
+        invalidation of that timeline position (model replacement or explicit
+        ``invalidate``). ``rows`` is ``None`` for a whole-frame drop or the
+        frozenset of dirty screen tile-rows for a partial one. The frontend
+        uses this to reset per-stream delta-encode chains — row-granular
+        resets re-key only the dirty tiles on the wire."""
         self._invalidation_listeners.append(cb)
+
+    def _notify_invalidation(self, ts: int, rows: frozenset | None) -> None:
+        for cb in self._invalidation_listeners:
+            cb(ts, rows)
 
     def invalidate(self, timestep: int, *, rows=None) -> int:
         """Drop cached frames of ``timestep`` — all of them, or (tile-cache
         servers) only the tiles in screen tile-rows ``rows``. Returns the
         number of cache entries dropped. In-flight and partially-assembled
         work is drained first, so a stale render can never land after its
-        invalidation."""
+        invalidation. Passing ``rows`` on a ``tile_cache=False`` server
+        raises: the whole-frame cache cannot honor a row-granular drop, and
+        silently widening it to the full frame would hide the caller's wrong
+        assumption about what stayed cached."""
+        if rows is not None and not self.tile_cache:
+            raise ValueError(
+                "invalidate(rows=...) needs tile_cache=True — a whole-frame "
+                "cache has no row-granular entries to drop; call "
+                "invalidate(timestep) for the full drop"
+            )
         self.flush()  # old-model batches/partials must not outlive the drop
         ts = int(timestep)
-        if rows is None or not self.tile_cache:
+        if rows is None:
             n = self.cache.drop(lambda k: k[0] == ts)
+            self._notify_invalidation(ts, None)
         else:
             # dirty tiles go, and so does every ASSEMBLED frame of the
             # timestep — a stitched frame contains its dirty rows
-            rset = {int(r) for r in rows}
+            rset = frozenset(int(r) for r in rows)
             n = self.cache.drop(
                 lambda k: k[0] == ts
                 and (k[-1] == ASSEMBLED or (k[-1] // self.tiles_x) in rset)
             )
-        for cb in self._invalidation_listeners:
-            cb(ts)
+            self._notify_invalidation(ts, rset)
+        return n
+
+    def _invalidate_changed(
+        self, timestep: int, old_entry: TimestepModels, new_params: G.GaussianModel, changed
+    ) -> int:
+        """World-space invalidation: drop exactly the tiles the changed
+        Gaussians can touch, computed per cached pose from their projected
+        bounds under the old and new parameters (see ``serve_gs.footprint``).
+        Falls back to a full drop whenever row math cannot be trusted: no
+        tile cache, a capacity (shape) change, or no registered poses."""
+        ts = int(timestep)
+        old = old_entry.pyramid.levels[0]  # full model, host numpy leaves
+        new = G.GaussianModel(*[np.asarray(x) for x in new_params])
+        if not self.tile_cache:
+            return self.invalidate(ts)
+        if any(np.asarray(getattr(old, f)).shape != np.asarray(getattr(new, f)).shape
+               for f in old._fields):
+            return self.invalidate(ts)  # capacity change: no per-slot diff exists
+        idx = changed_indices(old, new) if changed is True else np.asarray(changed).reshape(-1)
+        if idx.size == 0:
+            return 0  # bit-identical re-registration: nothing can differ
+        if not self._poses:
+            return self.invalidate(ts)
+        dirty = dirty_row_map(
+            old, new, idx, self._poses,
+            img_h=self.cfg.img_h, img_w=self.cfg.img_w, tile_h=self.tile_h,
+        )
+        return self._invalidate_per_pose(ts, dirty)
+
+    def _invalidate_per_pose(self, timestep: int, dirty_map: dict) -> int:
+        """Drop each cached pose's own dirty tile rows (``dirty_map``:
+        pose signature -> frozenset of rows). Entries whose pose is not in
+        the map (evicted from the registry) are dropped whole — conservative,
+        never stale. Listeners get the across-pose union (``None`` if any
+        pose was unknown, forcing full downstream resets)."""
+        self.flush()
+        ts = int(timestep)
+        unknown_pose = False
+
+        def doomed(k: tuple) -> bool:
+            nonlocal unknown_pose
+            if k[0] != ts:
+                return False
+            rows = dirty_map.get(tuple(k[4:-1]))
+            if rows is None:
+                unknown_pose = True
+                return True
+            if not rows:
+                return False
+            return k[-1] == ASSEMBLED or (k[-1] // self.tiles_x) in rows
+
+        n = self.cache.drop(doomed)
+        union: set[int] = set()
+        for rows in dirty_map.values():
+            union |= rows
+        self._notify_invalidation(ts, None if unknown_pose else frozenset(union))
         return n
 
     def _entry(self, timestep: int) -> TimestepModels:
@@ -470,6 +602,15 @@ class RenderServer:
         return _now() - t0
 
     # ------------------------------------------------------------------ admit
+    def _note_pose(self, sig: tuple, cam: Camera) -> None:
+        """Record a served pose in the bounded registry (LRU by use)."""
+        if sig in self._poses:
+            self._poses.move_to_end(sig)
+            return
+        self._poses[sig] = jax.tree_util.tree_map(np.asarray, cam)
+        while len(self._poses) > self.pose_registry_cap:
+            self._poses.popitem(last=False)
+
     def submit(
         self,
         cam: Camera,
@@ -478,6 +619,8 @@ class RenderServer:
         client_id: int = -1,
         t_submit: float | None = None,
         request_id: int | None = None,
+        gaze: tuple | None = None,
+        budget_ms: float | None = None,
     ) -> FrameFuture:
         """Admit one camera request; returns its :class:`FrameFuture`.
 
@@ -485,6 +628,18 @@ class RenderServer:
         requests matching an *in-flight* key attach to the existing future
         (one render serves every concurrent duplicate); everything else is
         queued for the next micro-batch.
+
+        ``gaze`` (normalized ``(x, y)`` in [0, 1]) and/or ``budget_ms`` opt a
+        request into **foveated per-tile LOD** on tile-cache servers: tile
+        rows near the gaze render at the coverage level, peripheral rows one
+        level coarser per row of distance, and ``budget_ms`` shrinks the
+        sharp zone until the estimated render cost fits (calibrated by a
+        running per-row cost estimate; best-effort, never a hard deadline).
+        Mixed-level frames assemble from the same per-(tile, level) cache
+        entries uniform frames use, so a foveated request reuses every
+        already-rendered tile at its assigned level and strip-renders only
+        the rest. On ``tile_cache=False`` servers the hints are ignored
+        (whole-frame serving has a single level per frame).
 
         ``request_id`` carries an id minted upstream (the gateway mints at
         admit) so the span tree keeps one id end to end; in-process callers
@@ -496,17 +651,61 @@ class RenderServer:
         if self._t_first is None:
             self._t_first = t
         entry = self._entry(timestep)
-        level = select_level(entry.pyramid, cam, img_w=self.cfg.img_w)
-        key = frame_key(
-            cam, level, height=self.cfg.img_h, width=self.cfg.img_w,
-            timestep=timestep, pose_quantum=self.pose_quantum,
-        )
+        n_lvl = len(entry.level_params)  # built pyramid depth (may be < n_levels)
+        level = min(select_level(entry.pyramid, cam, img_w=self.cfg.img_w), n_lvl - 1)
+        row_levels = row_keys = None
+        if (gaze is not None or budget_ms is not None) and self.tile_cache and not self.cache.disabled:
+            gaze_row = None
+            if gaze is not None:
+                gaze_row = min(max(int(float(gaze[1]) * self.tiles_y), 0), self.tiles_y - 1)
+            budget_rows = None
+            if budget_ms is not None and self._row_cost_ms:
+                budget_rows = float(budget_ms) / self._row_cost_ms
+            rl = select_level_map(
+                entry.pyramid, cam, img_w=self.cfg.img_w, tiles_y=self.tiles_y,
+                gaze_row=gaze_row, budget_rows=budget_rows,
+                n_levels=n_lvl, keep_ratio=self.keep_ratio,
+            )
+            if len(set(rl)) == 1:
+                level = rl[0]  # degenerate map: the uniform path serves it
+            else:
+                row_levels = rl
+                level = min(rl)  # the sharpest level present (gaze rows)
+        if row_levels is None:
+            key = frame_key(
+                cam, level, height=self.cfg.img_h, width=self.cfg.img_w,
+                timestep=timestep, pose_quantum=self.pose_quantum,
+            )
+        else:
+            # Mixed-level frame key: same layout as frame_key — (timestep,
+            # <level slot>, h, w) + pose signature — with the level slot
+            # holding the whole row-level map. Its ASSEMBLED entry caches the
+            # stitched result; the per-tile entries live under the *uniform*
+            # keys of each row's level, shared with uniform-level frames.
+            sig = quantize_camera(cam, pose_quantum=self.pose_quantum)
+            key = (int(timestep), ("fov",) + row_levels, self.cfg.img_h, self.cfg.img_w) + sig
+            uniq = {
+                lvl: frame_key(
+                    cam, lvl, height=self.cfg.img_h, width=self.cfg.img_w,
+                    timestep=timestep, pose_quantum=self.pose_quantum,
+                )
+                for lvl in set(row_levels)
+            }
+            row_keys = tuple(uniq[lvl] for lvl in row_levels)
         kw = {} if request_id is None else {"request_id": int(request_id)}
         req = RenderRequest(
             cam=cam, level=level, t_submit=t, client_id=client_id, cache_key=key,
-            timestep=int(timestep), **kw,
+            timestep=int(timestep), row_levels=row_levels, **kw,
         )
-        self._level_requests[level] += 1
+        self._c_level_requests[level].inc()
+        if self.tile_cache:
+            self._note_pose(tuple(key[4:]), cam)
+            if row_levels is None:
+                self._c_lod_rows[level].inc(self.tiles_y)
+            else:
+                self._c_foveated.inc()
+                for lvl in row_levels:
+                    self._c_lod_rows[lvl].inc()
         self._timestep_requests[int(timestep)] = self._timestep_requests.get(int(timestep), 0) + 1
         rec = self.obs.trace
 
@@ -522,7 +721,10 @@ class RenderServer:
                 fut = FrameFuture(self, key, req)
                 fut._resolve(frame)
                 return fut
-            tiles = [self.cache.get(tile_key(key, ti)) for ti in range(self.n_tiles)]
+            tiles = [
+                self.cache.get(tile_key(key if row_keys is None else row_keys[ti // self.tiles_x], ti))
+                for ti in range(self.n_tiles)
+            ]
             if all(t is not None for t in tiles):  # full hit: assemble once
                 self._full_hits.inc()
                 a0 = _now()
@@ -557,15 +759,25 @@ class RenderServer:
         fut = FrameFuture(self, key, req)
         req.future = fut
         self._pending[key] = fut
-        if tiles is not None and any(t is not None for t in tiles):
-            # partial hit: a dedicated job renders only the missing tile rows
-            self._partial_hits.inc()
+        if tiles is not None and (row_levels is not None or any(t is not None for t in tiles)):
+            # partial hit: a dedicated job renders only the missing tile rows.
+            # Mixed-level frames always take this path — the batcher's full-
+            # frame renders are single-level, but the strip renderer already
+            # knows how to fill each row at its own level.
+            got = sum(1 for x in tiles if x is not None)
+            if got:
+                self._partial_hits.inc()
+            else:
+                self._frame_misses.inc()
             if rec:
-                missing = sum(1 for x in tiles if x is None)
                 rec.record(req.request_id, "submit", t, _now(),
-                           outcome="partial_hit", missing_tiles=missing,
-                           level=level, timestep=int(timestep))
-            self._partial.append(_PartialJob(req=req, fut=fut, tiles=tiles))
+                           outcome="partial_hit" if got else "miss",
+                           missing_tiles=self.n_tiles - got,
+                           level=level, timestep=int(timestep),
+                           foveated=row_levels is not None)
+            self._partial.append(
+                _PartialJob(req=req, fut=fut, tiles=tiles, row_levels=row_levels, row_keys=row_keys)
+            )
         else:
             if self.tile_cache:
                 self._frame_misses.inc()
@@ -583,11 +795,13 @@ class RenderServer:
         assembled frame is bit-identical to the full-frame render it was
         split from (or would have been split from)."""
         th, tw = self.tile_h, self.tile_w
-        frame = np.ascontiguousarray(
+        # build into an owned buffer (no .base): the cache stores it as-is,
+        # so the resolved frame and the ASSEMBLED cache entry are one object
+        frame = np.empty((self.cfg.img_h, self.cfg.img_w, 3), dtype=tiles[0].dtype)
+        frame.reshape(self.tiles_y, th, self.tiles_x, tw, 3)[:] = (
             np.stack(tiles)
             .reshape(self.tiles_y, self.tiles_x, th, tw, 3)
             .transpose(0, 2, 1, 3, 4)
-            .reshape(self.cfg.img_h, self.cfg.img_w, 3)
         )
         frame.setflags(write=False)
         return frame
@@ -637,18 +851,28 @@ class RenderServer:
                     )
         return _now() - t0
 
+    def _update_row_cost(self, cost_ms: float) -> None:
+        """Fold one measurement into the level-0-row cost EWMA (the
+        budget_ms calibration); measurements arrive already normalized to
+        level-0 row units."""
+        prev = self._row_cost_ms
+        self._row_cost_ms = cost_ms if prev is None else 0.8 * prev + 0.2 * cost_ms
+
     def _run_partial(self, job: _PartialJob) -> int:
-        """Render a partial hit's missing tile rows, assemble, resolve."""
+        """Render a partial hit's missing tile rows — each at its assigned
+        level for foveated jobs — then assemble and resolve."""
         req = job.req
         entry = self._entry(req.timestep)
         cam_np = jax.tree_util.tree_map(np.asarray, req.cam)
+        lvl_of = (lambda r: job.row_levels[r]) if job.row_levels is not None else (lambda r: req.level)
+        key_of = (lambda r: job.row_keys[r]) if job.row_keys is not None else (lambda r: req.cache_key)
         missing = sorted(
             {ti // self.tiles_x for ti, t in enumerate(job.tiles) if t is None}
         )
         t0 = _now()
         # dispatch every missing row first (jax async dispatch), then block
         launched = [
-            (r, self._strip_fn(req.level, r)(entry.level_params[req.level], cam_np))
+            (r, self._strip_fn(lvl_of(r), r)(entry.level_params[lvl_of(r)], cam_np))
             for r in missing
         ]
         self._c_dispatch_s.add(_now() - t0)
@@ -661,7 +885,7 @@ class RenderServer:
                         strip[:, tx * self.tile_w : (tx + 1) * self.tile_w]
                     )
                     tile.setflags(write=False)
-                    self.cache.put(tile_key(req.cache_key, ti), tile)
+                    self.cache.put(tile_key(key_of(r), ti), tile)
                     job.tiles[ti] = tile
         now = _now()
         self._c_block_s.add(now - t0)
@@ -669,10 +893,14 @@ class RenderServer:
         self._busy_until = now
         self._rows_rendered.inc(len(missing))
         self._render_rows.inc(len(missing))
+        if missing:
+            units = sum(self.keep_ratio ** lvl_of(r) for r in missing)
+            self._update_row_cost((now - t0) * 1e3 / units)
         rec = self.obs.trace
         if rec:
             rec.record(req.request_id, "render", t0, now,
-                       partial=True, rows=len(missing), level=req.level)
+                       partial=True, rows=len(missing), level=req.level,
+                       foveated=job.row_levels is not None)
         frame = self._assemble(job.tiles)
         self.cache.put(tile_key(req.cache_key, ASSEMBLED), frame, dedup=False)
         if rec:
@@ -715,6 +943,8 @@ class RenderServer:
         self._busy_until = now
         done = 0
         self._render_rows.inc(self.tiles_y * len(inf.mb.requests))
+        units = self.tiles_y * (self.keep_ratio ** inf.mb.level) * len(inf.mb.requests)
+        self._update_row_cost((now - inf.t_dispatch) * 1e3 / units)
         rec = self.obs.trace
         for i, req in enumerate(inf.mb.requests):
             frame = imgs[i].copy()  # own buffer: never pin the whole batch
@@ -899,7 +1129,13 @@ class RenderServer:
             "lod": {
                 "live_counts": list(self.pyramid.live_counts),
                 "padded_counts": [lvl.n for lvl in self.pyramid.levels],
-                "requests_per_level": list(self._level_requests),
+                "requests_per_level": self.level_requests,
+                # per-tile-row LOD assignment tallies (foveated serving):
+                # rows_per_level counts every tile row a request *assigned*
+                # to each level, uniform or mixed
+                "rows_per_level": [c.value for c in self._c_lod_rows],
+                "foveated_requests": self._c_foveated.value,
+                "row_cost_ms": round(self._row_cost_ms, 4) if self._row_cost_ms else 0.0,
             },
             "timeline": {
                 "timesteps": self.timesteps(),

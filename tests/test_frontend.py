@@ -227,6 +227,37 @@ def test_encoder_falls_back_to_raw_when_compression_loses():
         np.testing.assert_array_equal(dec.decode("s", meta3, payload3), quantize_rgb8(c))
 
 
+def test_encoder_partial_reset_forces_rows_and_stays_exact():
+    """A row-granular reset must not cut the tiles8 chain: the next frame
+    ships exactly the forced rows' tiles (even at zero pixel diff), decodes
+    bit-exactly, and consumes the mark."""
+    rng = np.random.default_rng(5)
+    enc, dec = FrameEncoder(tiles=True, tile=(8, 8)), FrameDecoder()
+    base = rng.random((24, 24, 3)).astype(np.float32)
+    dec.decode("s", *enc.encode("s", base))  # keyframe
+    enc.reset("s", rows=[1])
+    meta, payload = enc.encode("s", base)  # identical pixels, row 1 forced
+    assert meta["encoding"] == "tiles8"  # chain intact, not a keyframe
+    shipped = set(meta["tiles"]) | {t for t, _ in meta.get("refs") or []}
+    assert shipped == {3, 4, 5}  # row 1 of a 3-wide tile grid
+    np.testing.assert_array_equal(dec.decode("s", meta, payload), quantize_rgb8(base))
+    assert enc.stats()["tiles_forced"] == 3
+    # the mark is consumed: the next identical frame ships nothing
+    meta2, payload2 = enc.encode("s", base)
+    assert meta2["tiles"] == [] and not meta2.get("refs")
+    np.testing.assert_array_equal(dec.decode("s", meta2, payload2), quantize_rgb8(base))
+    # an empty row set is a no-op, not a chain cut
+    enc.reset("s", rows=[])
+    meta3, _ = enc.encode("s", base)
+    assert meta3["encoding"] == "tiles8"
+    # a non-tiles encoder cannot patch rows: it falls back to the full reset
+    enc2 = FrameEncoder()
+    enc2.encode("s", base)
+    enc2.reset("s", rows=[0])
+    meta4, _ = enc2.encode("s", base)
+    assert meta4["encoding"] == "rgb8"
+
+
 # ================================================================== gateway
 def _manager(g=None, *, pipeline_depth=2, timeline_steps=2, **kw):
     g = g if g is not None else make_scene(n=256, scale=0.06)
@@ -588,6 +619,80 @@ def test_invalidation_resets_wire_delta_chain():
             assert render(3)["encoding"] == "tiles8"  # and re-establishes
             s.sendall(pack_message({"type": "bye"}))
     assert gw.delta_resets >= 1
+
+
+def test_row_invalidation_partial_resets_wire_chain():
+    """Tentpole wire behavior: a row-granular invalidation re-keys ONLY the
+    dirty rows' tiles on the wire — the tiles8 chain is never cut, the
+    decoded frame stays bit-exact, and the gateway counts a partial (not
+    full) reset."""
+    mgr = _manager(timeline_steps=0)
+    mgr.warmup()
+    gw = Gateway(mgr, port=0)
+    with GatewayThread(gw) as gt:
+        cam_wire = proto.camera_to_wire(make_cam(H, W))
+        dec = FrameDecoder()
+        with socket.create_connection(("127.0.0.1", gt.port), timeout=30) as s:
+            s.sendall(pack_message({
+                "type": "hello", "protocol": 2,
+                "encodings": ["rgb8", "zdelta8", "tiles8"],
+            }))
+            _read_msg(s)
+
+            def render(seq):
+                s.sendall(pack_message({
+                    "type": "render", "seq": seq, "stream": "static",
+                    "timestep": 0, "camera": cam_wire,
+                }))
+                fh, payload = _read_msg(s)
+                return fh, dec.decode("static", fh, payload)
+
+            render(0)                       # rgb8 keyframe
+            fh1, f1 = render(1)             # tiles8, chain established
+            assert fh1["encoding"] == "tiles8" and fh1["tiles"] == []
+            gw.run_on_engine(
+                lambda: mgr.invalidate("static", 0, rows=[0])
+            ).result(timeout=60)
+            fh2, f2 = render(2)
+            # the chain survived — no keyframe — but row 0's tiles were
+            # re-keyed (shipped or store-reffed) despite identical pixels
+            assert fh2["encoding"] == "tiles8"
+            rekeyed = set(fh2["tiles"]) | {t for t, _ in fh2.get("refs") or []}
+            assert rekeyed == set(range(W // 16))  # exactly tile row 0
+            np.testing.assert_array_equal(f2, f1)  # model unchanged: bit-exact
+            s.sendall(pack_message({"type": "bye"}))
+    assert gw.partial_resets >= 1 and gw.delta_resets == 0
+
+
+def test_render_hints_ride_the_wire_and_validate(gateway_thread):
+    """gaze/budget_ms are optional header fields: valid hints serve normally
+    (this pool's single-level pyramid collapses them to the uniform path),
+    malformed ones answer bad_request without killing the connection."""
+    gt = gateway_thread
+    cam = make_cam(H, W)
+    with FrontendClient("127.0.0.1", gt.port) as cl:
+        a = cl.render("static", cam)
+        b = cl.render("static", cam, gaze=(0.5, 0.5), budget_ms=50.0)
+        np.testing.assert_array_equal(a, b)
+    cam_wire = proto.camera_to_wire(cam)
+    with socket.create_connection(("127.0.0.1", gt.port), timeout=30) as s:
+        s.sendall(pack_message({"type": "hello", "protocol": 2}))
+        _read_msg(s)
+        for bad in ({"budget_ms": -5}, {"gaze": "abc"}, {"gaze": [0.5]}):
+            s.sendall(pack_message({
+                "type": "render", "seq": 9, "stream": "static",
+                "timestep": 0, "camera": cam_wire, **bad,
+            }))
+            h, _ = _read_msg(s)
+            assert h["type"] == "error" and h["code"] == "bad_request", (bad, h)
+        # the connection survives: a well-formed hinted render still serves
+        s.sendall(pack_message({
+            "type": "render", "seq": 10, "stream": "static", "timestep": 0,
+            "camera": cam_wire, "gaze": [0.2, 0.8], "budget_ms": 100.0,
+        }))
+        h, payload = _read_msg(s)
+        assert h["type"] == "frame" and len(payload) > 0
+        s.sendall(pack_message({"type": "bye"}))
 
 
 # ------------------------------------------------------------ session layer

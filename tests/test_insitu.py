@@ -57,9 +57,10 @@ def test_reseed_dead_slots_fills_only_dead_capacity():
 
     new_pts = rng.normal(0, 0.4, (30, 3)).astype(np.float32) + 5.0
     new_cols = np.full((30, 3), 0.7, np.float32)
-    new_state, n_reseeded = reseed_dead_slots(state, new_pts, new_cols, opacity_thresh=0.005)
+    new_state, n_reseeded, slots = reseed_dead_slots(state, new_pts, new_cols, opacity_thresh=0.005)
 
     assert n_reseeded == 8  # all dead capacity refilled (points were plentiful)
+    np.testing.assert_array_equal(slots, np.arange(12, 20))  # the refilled rows
     assert new_state.params.n == 20  # shapes untouched
     means = np.asarray(new_state.params.means)
     np.testing.assert_allclose(means[:12], pts0, atol=0)  # live rows untouched
@@ -72,8 +73,8 @@ def test_reseed_dead_slots_fills_only_dead_capacity():
 
 def test_reseed_with_no_dead_slots_is_identity():
     state = init_state(_random_params(16))
-    new_state, n = reseed_dead_slots(state, np.zeros((5, 3), np.float32), np.zeros((5, 3), np.float32))
-    assert n == 0
+    new_state, n, slots = reseed_dead_slots(state, np.zeros((5, 3), np.float32), np.zeros((5, 3), np.float32))
+    assert n == 0 and slots.size == 0
     np.testing.assert_array_equal(
         np.asarray(new_state.params.means), np.asarray(state.params.means)
     )
@@ -147,6 +148,58 @@ def test_temporal_store_survives_reopen(tmp_path):
     )
     with pytest.raises(AssertionError):
         reopened.append(2, g)  # timesteps must be strictly increasing
+
+
+def test_temporal_store_changed_slots_from_delta_encoding(tmp_path):
+    """The delta encoding already knows which slots an update rewrote:
+    ``changed_slots`` recovers exactly the perturbed rows from a delta frame
+    and answers None (unknown) for keyframes."""
+    import jax.numpy as jnp
+
+    g = _random_params(32, seed=12)
+    store = TemporalCheckpointStore(str(tmp_path / "seq"), keyframe_interval=10)
+    store.append(0, g)
+    means2 = np.asarray(g.means).copy()
+    means2[[3, 7]] += 0.05
+    store.append(1, g._replace(means=jnp.asarray(means2)))
+    assert store.changed_slots(0) is None  # keyframe: no change set exists
+    np.testing.assert_array_equal(store.changed_slots(1), [3, 7])
+
+
+def test_replay_live_uses_changed_slots_for_partial_invalidation(tmp_path):
+    """Post hoc live replay: stored deltas drive world-space invalidation of
+    ONE serving slot — after the first pose registers, bounded updates drop
+    tile rows, not whole frames, and served frames track the new model."""
+    from repro.insitu import replay_live
+
+    store = TemporalCheckpointStore(str(tmp_path / "seq"), keyframe_interval=10)
+    g = _random_params(128, seed=5)
+    store.append(0, g)
+    means = np.asarray(g.means)
+    for t in (1, 2):
+        moved = means.copy()
+        moved[:4] += np.float32(0.05 * t)  # a bounded 4-slot update
+        store.append(t, g._replace(means=jnp.asarray(moved)))
+
+    cfg = GSConfig(img_h=H, img_w=W, k_per_tile=64)
+    server = build_timeline_server(
+        store, cfg, timesteps=[0], n_levels=1, max_batch=2, cache_capacity=64
+    )
+    events = []
+    server.add_invalidation_listener(lambda ts, rows: events.append(rows))
+    cam = make_cam(H, W)
+    frames = [server.submit(cam, timestep=0).result()]  # registers the pose
+    replay_live(
+        store, server, timesteps=[1, 2], serve_timestep=0,
+        on_timestep=lambda t: frames.append(server.submit(cam, timestep=0).result()),
+    )
+    assert len(frames) == 3  # initial + one per replayed delta timestep
+    assert np.abs(frames[2] - frames[0]).max() > 1e-4  # updates visible
+    # the delta timesteps invalidated row sets, never the whole frame
+    assert len(events) == 2 and all(rows is not None for rows in events)
+    # ground truth: the final frame equals a fresh full render of t=2
+    ref_server = build_timeline_server(store, cfg, timesteps=[2], n_levels=1, max_batch=2)
+    np.testing.assert_array_equal(frames[2], ref_server.submit(cam, timestep=2).result())
 
 
 # ------------------------------------------------------- time-scrub serving
