@@ -34,6 +34,7 @@ import jax
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
 
+from bench_schema import stage_breakdown, write_bench
 from repro.core.config import GSConfig
 from repro.insitu import InsituTrainer, TemporalCheckpointStore, build_timeline_server, scrub
 from repro.serve_gs import front_camera
@@ -84,6 +85,9 @@ def main(argv=None):
     )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--bench-out", default=None,
+                    help="also write a flat BENCH_*.json record (bench_schema) with "
+                         "per-stage train histograms + shard-balance gauges")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -206,6 +210,34 @@ def main(argv=None):
             os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
             with open(args.out, "w") as f:
                 f.write(out)
+        if args.bench_out:
+            # the warm trainer's registry holds the whole run's train.*
+            # telemetry: step/timestep histograms become the stages block,
+            # shard-balance gauges ride along as flat metrics
+            snap = warm.obs.metrics.snapshot()
+            total_steps = sum(r.steps for r in warm_reports)
+            total_train_s = sum(r.train_s for r in warm_reports)
+            bench_metrics = {
+                "steps_per_s": round(total_steps / max(total_train_s, 1e-9), 3),
+                "frames_per_s": serve_rep["frames_per_s"],
+                "recompile_count": warm.n_traces,
+                "warm_fewer_steps_consecutive": best_consec,
+                "gather_bytes": snap.get("train.gather_bytes", 0),
+            }
+            for k, v in snap.items():
+                if k.startswith("train.shard_") or k in ("train.alive_total", "train.psnr"):
+                    bench_metrics[k] = v
+            write_bench(
+                args.bench_out, "insitu_throughput",
+                config={
+                    "dataset": args.dataset, "timesteps": args.timesteps,
+                    "volume_res": args.volume_res, "res": args.res,
+                    "capacity": warm.capacity, "cold_steps": args.cold_steps,
+                    "smoke": args.smoke,
+                },
+                metrics=bench_metrics,
+                stages=stage_breakdown(snap, "train."),
+            )
         assert report["acceptance"]["single_train_step_trace"], report["recompile_count"]
         assert report["acceptance"]["warm_fewer_on_2_consecutive"], fewer
 

@@ -14,10 +14,15 @@ The paper's qualitative claims we validate:
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from bench_schema import write_bench
 
 CASES = [
     # (name, points, res, workers)
@@ -81,6 +86,43 @@ def table(out=print):
     return rows
 
 
+def emit_bench(rows, path: str) -> dict:
+    """Flatten the scaling table into a schema-2 BENCH record: per-case
+    modeled step seconds + per-worker peak bytes (the dry-run analog of the
+    live ``train.shard_*`` / devmem gauges), so the perf trajectory diff
+    covers the paper-scale cases too."""
+    metrics = {}
+    base = {}
+    for name, res, w, s_ref, s_k, peak, rf, mem_k in rows:
+        key = f"{name}_{res}_{w}w"
+        metrics[f"step_kernel_s.{key}"] = round(s_k, 6)
+        metrics[f"peak_bytes.{key}"] = int(peak)
+        if w == 1:
+            base[(name, res)] = s_k
+    for name, res, w, s_ref, s_k, peak, rf, mem_k in rows:
+        b = base.get((name, res))
+        if b and w > 1:
+            metrics[f"speedup.{name}_{res}_{w}w"] = round(b / s_k, 3)
+    metrics["cases"] = len(rows)
+    metrics["fits_40gb"] = sum(1 for r in rows if r[5] < WORKER_HBM)
+    return write_bench(
+        path, "table1_scaling",
+        config={"worker_hbm_bytes": WORKER_HBM, "source": OUT},
+        metrics=metrics,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="skip the 2048px cases")
+    ap.add_argument("--bench-out", default=None,
+                    help="also write a flat BENCH_*.json record (bench_schema)")
+    args = ap.parse_args(argv)
+    run_all(fast=args.fast)
+    rows = table()
+    if args.bench_out and rows:
+        emit_bench(rows, args.bench_out)
+
+
 if __name__ == "__main__":
-    run_all()
-    table()
+    main()

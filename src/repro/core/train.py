@@ -64,6 +64,106 @@ def state_shardings(mesh: Mesh, model_axis: str = "model"):
     )
 
 
+def resolve_gather_mode(cfg: GSConfig, mesh: Mesh, *, data_axes=("data",), model_axis="model") -> str:
+    """The comm schedule ``make_train_step`` will actually use (resolves
+    ``"auto"`` exactly like the step builder does)."""
+    d = 1
+    for a in data_axes:
+        d *= mesh.shape[a]
+    m = mesh.shape[model_axis]
+    mode = cfg.gather_mode
+    if mode == "auto":
+        mode = "params3d" if (cfg.batch_size // d) >= 2 and m > 1 else "projected"
+    return mode
+
+
+def all_gather_bytes_per_step(
+    cfg: GSConfig, mesh: Mesh, n_total: int,
+    *, data_axes: tuple[str, ...] = ("data",), model_axis: str = "model",
+) -> int:
+    """Analytic model-axis all-gather payload one train step materializes per
+    device (bytes of the gathered tensor; float32). This is the collective
+    the paper's scaling lives or dies on, so it travels with the per-step
+    telemetry: ``projected`` gathers 11-float splats per local view, the
+    beyond-paper ``params3d`` schedule gathers the 3D state once per step."""
+    m = mesh.shape[model_axis]
+    if m <= 1:
+        return 0
+    d = 1
+    for a in data_axes:
+        d *= mesh.shape[a]
+    if resolve_gather_mode(cfg, mesh, data_axes=data_axes, model_axis=model_axis) == "params3d":
+        sh_k = (cfg.sh_degree + 1) ** 2
+        floats = n_total * (11 + 3 * sh_k)
+    else:
+        b_local = max(cfg.batch_size // d, 1)
+        floats = b_local * n_total * P.PACKED_DIM
+    return int(floats) * 4
+
+
+def shard_balance(state: GSTrainState, *, opacity_thresh: float = 0.005) -> dict:
+    """Per-model-shard load statistics, the trigger signal for dynamic
+    rebalancing (Grendel's result: static Gaussian splits skew).
+
+    Walks the params' ``addressable_shards`` — the same shard-by-shard pull
+    checkpoint save uses, deduped across data-axis replicas — and reduces
+    each shard ON ITS DEVICE (a handful of scalars cross to host, never the
+    arrays): ``alive`` counts Gaussians whose opacity clears
+    ``opacity_thresh`` (dead padding + pruned slots don't load a worker),
+    ``visible`` counts slots that have ever projected on screen
+    (``max_radii > 0``), and ``projected`` sums the accumulated per-view
+    visibility tallies (``vis_count``) — the actual splat workload each
+    shard contributed since the densify stats were last zeroed.
+
+    ``imbalance`` is max/mean of the per-shard alive counts (1.0 = perfectly
+    balanced; 0.0 only for an all-dead model).
+    """
+    import numpy as np
+
+    logit_thresh = float(np.log(opacity_thresh / (1.0 - opacity_thresh)))
+
+    def _shards(leaf):
+        seen = {}
+        for shard in leaf.addressable_shards:
+            key = tuple((s.start or 0) for s in shard.index)
+            if key not in seen:
+                seen[key] = shard.data
+        return [seen[k] for k in sorted(seen)]
+
+    opac = _shards(state.params.opacity_logit)
+    vis = _shards(state.vis_count)
+    radii = _shards(state.max_radii)
+    capacity = [int(s.shape[0]) for s in opac]
+    alive = [int(jnp.sum(s > logit_thresh)) for s in opac]
+    visible = [int(jnp.sum(r > 0.0)) for r in radii]
+    projected = [float(jnp.sum(v)) for v in vis]
+    mean_alive = sum(alive) / len(alive)
+    imbalance = (max(alive) / mean_alive) if mean_alive > 0 else 0.0
+    return {
+        "n_shards": len(capacity),
+        "capacity": capacity,
+        "alive": alive,
+        "visible": visible,
+        "projected": projected,
+        "alive_total": sum(alive),
+        "imbalance": imbalance,
+    }
+
+
+def record_shard_balance(metrics, bal: dict, *, prefix: str = "train") -> None:
+    """Land a :func:`shard_balance` result on a registry: per-shard gauges
+    ``<prefix>.shard_alive.s<i>`` / ``.shard_visible.s<i>`` /
+    ``.shard_projected.s<i>`` / ``.shard_capacity.s<i>`` plus the
+    ``<prefix>.shard_imbalance`` gauge a rebalancing pass will trigger on."""
+    for i in range(bal["n_shards"]):
+        metrics.gauge(f"{prefix}.shard_capacity.s{i}").set(bal["capacity"][i])
+        metrics.gauge(f"{prefix}.shard_alive.s{i}").set(bal["alive"][i])
+        metrics.gauge(f"{prefix}.shard_visible.s{i}").set(bal["visible"][i])
+        metrics.gauge(f"{prefix}.shard_projected.s{i}").set(bal["projected"][i])
+    metrics.gauge(f"{prefix}.alive_total").set(bal["alive_total"])
+    metrics.gauge(f"{prefix}.shard_imbalance").set(round(float(bal["imbalance"]), 6))
+
+
 def make_train_step(
     mesh: Mesh,
     cfg: GSConfig,
@@ -91,9 +191,7 @@ def make_train_step(
     all_axes = tuple(data_axes) + (model_axis,)
     # comm-schedule selection (EXPERIMENTS.md G3 ablation): the 3D-state
     # gather wins whenever a worker renders >= 2 views of the same params
-    gather_mode = cfg.gather_mode
-    if gather_mode == "auto":
-        gather_mode = "params3d" if (cfg.batch_size // d) >= 2 and m > 1 else "projected"
+    gather_mode = resolve_gather_mode(cfg, mesh, data_axes=data_axes, model_axis=model_axis)
 
     def local_step(state: GSTrainState, cams: P.Camera, gt: jax.Array):
         params = state.params

@@ -21,7 +21,6 @@ shape changes — repeated jit traces. This trainer fixes both:
 from __future__ import annotations
 
 import dataclasses
-import time
 import zlib
 
 import jax
@@ -34,11 +33,16 @@ from repro.core.densify import DEAD_LOGIT
 from repro.core.losses import psnr
 from repro.core.train import (
     GSTrainState,
+    all_gather_bytes_per_step,
     init_state,
     make_eval_render,
     make_train_step,
+    record_shard_balance,
+    shard_balance,
     state_shardings,
 )
+from repro.obs import Obs, devmem, new_request_id
+from repro.obs.clock import now, since
 from repro.data.views import ViewDataset
 from repro.volume.datasets import VolumeSpec
 from repro.volume.isosurface import extract_isosurface_points
@@ -187,6 +191,7 @@ class InsituTrainer:
         eval_every: int = 0,
         seed: int = 0,
         verbose: bool = False,
+        obs: Obs | None = None,
     ):
         self.cfg = cfg
         self.mesh = mesh
@@ -204,12 +209,18 @@ class InsituTrainer:
         self.eval_every = eval_every
         self.rng = np.random.default_rng(seed)
         self.verbose = verbose
+        # the observability bundle this trainer reports through: share one
+        # with a serving stack (run(server=...)) and training spans land on
+        # the same clock/ring as the request spans; standalone trainers get
+        # a private bundle so instrumentation never needs a None check
+        self.obs = obs if obs is not None else Obs()
 
         self.state: GSTrainState | None = None
         self.t_index = 0
         self.reports: list[TimestepReport] = []
         self._step_fn = None
         self._eval_fn = None
+        self._rid = 0  # request id of the timestep currently being absorbed
 
     # ------------------------------------------------------------- plumbing
     @property
@@ -239,20 +250,55 @@ class InsituTrainer:
         )
 
     def _eval_psnr(self, data: ViewDataset) -> float:
+        rec = self.obs.trace
+        t0 = now() if rec else 0.0
         cam, gt = data.view(self.eval_view % self.n_views)
         img, _ = self._eval_fn(self.state.params, cam)
-        return float(psnr(img, gt))
+        p = float(psnr(img, gt))
+        if rec:
+            rec.record(self._rid, "eval", t0, now(), psnr=round(p, 3))
+        self.obs.metrics.gauge("train.psnr").set(round(p, 4))
+        return p
 
     def _fit(self, data: ViewDataset, steps: int, *, psnr0: float) -> tuple[float, list]:
+        """The optimization loop of one timestep, instrumented per step:
+        ``batch`` (host view assembly) -> ``dispatch`` (jitted call returns
+        under async dispatch) -> ``device`` (bounded by block_until_ready,
+        traced runs only — an untraced run keeps jax's dispatch overlap and
+        the step stays bitwise identical either way). Wall per step always
+        lands in the ``train.step_ms`` histogram; device seconds land in
+        ``train.device_ms`` when tracing bounds them."""
+        m = self.obs.metrics
+        step_ms = m.histogram("train.step_ms")
+        device_ms = m.histogram("train.device_ms")
+        loss_gauge = m.gauge("train.loss")
+        steps_total = m.counter("train.steps")
         curve = []
         loss = float("nan")
         if self.eval_every > 0:
             curve.append((0, psnr0))  # already measured by the caller
+        rid = self._rid
+        t_iter = now()
         for i, (cams, gt) in enumerate(data.batches(self.cfg.batch_size, steps=steps)):
+            rec = self.obs.trace  # re-read: tracing may toggle mid-fit
+            t_batch = now()
+            if rec:
+                rec.record(rid, "batch", t_iter, t_batch, step=i)
             self.state, metrics = self._step_fn(self.state, cams, gt)
-            loss = float(metrics["loss"])
+            if rec:
+                t_disp = now()
+                rec.record(rid, "dispatch", t_batch, t_disp, step=i)
+                jax.block_until_ready(self.state)
+                t_dev = now()
+                rec.record(rid, "device", t_disp, t_dev, step=i)
+                device_ms.observe((t_dev - t_disp) * 1e3)
+            loss = float(metrics["loss"])  # blocks on the step either way
+            loss_gauge.set(loss)
+            steps_total.inc()
+            step_ms.observe(since(t_batch) * 1e3)
             if self.eval_every > 0 and (i + 1) % self.eval_every == 0:
                 curve.append((i + 1, self._eval_psnr(data)))
+            t_iter = now()
         return loss, curve
 
     def reset(self) -> None:
@@ -264,11 +310,26 @@ class InsituTrainer:
         self.t_index = 0
         self.reports = []
 
+    def shard_balance(self, *, record: bool = True) -> dict:
+        """Per-model-shard load stats of the current state (see
+        :func:`repro.core.train.shard_balance`); lands them on the registry
+        (``train.shard_*`` gauges) unless ``record=False``."""
+        assert self.state is not None, "no model yet"
+        bal = shard_balance(self.state, opacity_thresh=self.cfg.prune_opacity_thresh)
+        if record:
+            record_shard_balance(self.obs.metrics, bal)
+        return bal
+
     # ------------------------------------------------------------ timesteps
     def start(self, vol: VolumeSpec, *, steps: int | None = None) -> TimestepReport:
         assert self.state is None, "start() already called; use advance()"
-        t0 = time.time()
+        t0 = now()
+        self._rid = new_request_id()
+        rec = self.obs.trace
         pts, _, cols = extract_isosurface_points(vol, max_points=self.max_points)
+        if rec:
+            rec.record(self._rid, "extract", t0, now(), t_index=self.t_index,
+                       points=int(pts.shape[0]), vol=vol.name)
         if self.capacity is None:
             quantum = self.n_shards * self.cfg.pad_quantum
             want = int(pts.shape[0] * self.capacity_factor)
@@ -286,10 +347,16 @@ class InsituTrainer:
 
     def advance(self, vol: VolumeSpec, *, steps: int | None = None) -> TimestepReport:
         assert self.state is not None, "advance() before start()"
-        t0 = time.time()
+        t0 = now()
+        self._rid = new_request_id()
+        rec = self.obs.trace
         pts, _, cols = extract_isosurface_points(vol, max_points=self.max_points)
+        if rec:
+            rec.record(self._rid, "extract", t0, now(), t_index=self.t_index,
+                       points=int(pts.shape[0]), vol=vol.name)
         # params before reseed+training: the diff baseline for changed_slots
         prev_params = jax.tree_util.tree_map(np.asarray, self.state.params)
+        t_rs = now() if rec else 0.0
         self.state, n_reseeded, _ = reseed_dead_slots(
             self.state,
             pts,
@@ -299,6 +366,10 @@ class InsituTrainer:
             rng=self.rng,
         )
         self.state = jax.device_put(self.state, state_shardings(self.mesh))
+        if rec:
+            rec.record(self._rid, "reseed", t_rs, now(), t_index=self.t_index,
+                       filled=int(n_reseeded))
+        self.obs.metrics.counter("train.reseeded").inc(int(n_reseeded))
         rep = self._absorb(
             vol, pts, cols, n_reseeded, steps or self.warm_steps, "warm", t0,
             prev_params=prev_params,
@@ -306,11 +377,16 @@ class InsituTrainer:
         return rep
 
     def _absorb(self, vol, pts, cols, n_reseeded, steps, mode, t0, prev_params=None) -> TimestepReport:
+        m = self.obs.metrics
         data = self._dataset(vol)
         p_before = self._eval_psnr(data)
-        ttrain = time.time()
+        ttrain = now()
         loss, curve = self._fit(data, steps, psnr0=p_before)
-        train_s = time.time() - ttrain
+        train_s = since(ttrain)
+        rec = self.obs.trace
+        if rec:
+            rec.record(self._rid, "fit", ttrain, now(), t_index=self.t_index,
+                       mode=mode, steps=steps)
         changed = None
         if prev_params is not None:
             # one host-side diff covers reseeded slots AND optimizer-moved
@@ -329,12 +405,23 @@ class InsituTrainer:
             psnr_before=p_before,
             psnr_after=self._eval_psnr(data),
             loss_final=loss,
-            wall_s=time.time() - t0,
+            wall_s=since(t0),
             train_s=train_s,
             n_traces=self.n_traces,
             psnr_curve=curve,
             changed_slots=changed,
         )
+        # per-timestep telemetry: shard balance (the rebalancing trigger
+        # signal), the step's analytic all-gather payload, and the device
+        # memory watermark — Miranda-scale capacity limits show up here
+        # timesteps before they OOM
+        self.shard_balance()
+        m.counter("train.gather_bytes").inc(
+            all_gather_bytes_per_step(self.cfg, self.mesh, self.state.params.n) * steps
+        )
+        m.counter("train.timesteps").inc()
+        m.histogram("train.timestep_wall_ms").observe(rep.wall_s * 1e3)
+        devmem.record(m)
         self.reports.append(rep)
         self.t_index += 1
         if self.verbose:
@@ -368,9 +455,14 @@ class InsituTrainer:
         for vol in stream:
             rep = self.start(vol) if self.state is None else self.advance(vol)
             out.append(rep)
+            rec = self.obs.trace
             if store is not None:
+                t0 = now() if rec else 0.0
                 store.append(rep.t_index, self.state.params)
+                if rec:
+                    rec.record(self._rid, "ckpt", t0, now(), t_index=rep.t_index)
             if server is not None:
+                t0 = now() if rec else 0.0
                 params = jax.tree_util.tree_map(np.asarray, self.state.params)
                 if rep.changed_slots is None:
                     server.add_timestep(int(serve_timestep), params)
@@ -378,6 +470,12 @@ class InsituTrainer:
                     server.add_timestep(
                         int(serve_timestep), params,
                         changed=np.asarray(rep.changed_slots, np.int64),
+                    )
+                if rec:
+                    rec.record(
+                        self._rid, "serve", t0, now(), t_index=rep.t_index,
+                        changed=(len(rep.changed_slots)
+                                 if rep.changed_slots is not None else -1),
                     )
         if store is not None:
             store.flush()

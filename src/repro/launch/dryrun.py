@@ -13,12 +13,12 @@ Usage:
 """
 import argparse
 import json
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_arch
+from repro.obs.clock import now, since
 from repro.configs.common import SHAPES, lm_batch_specs, decode_specs, params_specs
 from repro.launch import hlo_cost
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
@@ -47,7 +47,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False, fsdp: boo
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(list(mesh.shape.values())))
-    t0 = time.time()
+    # monotonic: compile timing must not jump when NTP steps the wall clock
+    t0 = now()
 
     rules = None
     if getattr(cfg, "pure_dp", False):
@@ -85,7 +86,7 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False, fsdp: boo
                 params, specs["cache"], specs["tokens"], specs["pos"]
             )
         compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = since(t0)
 
     mem = compiled.memory_analysis()
     print(mem)

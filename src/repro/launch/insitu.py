@@ -20,6 +20,7 @@ import argparse
 import dataclasses
 import json
 import os
+import sys
 import tempfile
 
 import jax
@@ -33,6 +34,8 @@ from repro.insitu import (
     replay_live,
     scrub,
 )
+from repro.obs import Obs, trace_meta, validate_trace_jsonl, write_trace
+from repro.obs.clock import now, since
 from repro.serve_gs import front_camera
 from repro.volume.timevary import GENERATORS, synthetic_stream
 
@@ -101,6 +104,40 @@ def live_replay_smoke(store: TemporalCheckpointStore, cfg: GSConfig) -> dict:
         }
 
 
+def traced_overhead_gate(trainer: InsituTrainer, vol, *, probe_steps: int, budget: float) -> dict:
+    """Bound what span tracing costs a warm train step (the training twin of
+    the serving stack's traced-request gate). Three probe laps on the live
+    model — warmup+untraced, untraced, traced — each through the real
+    ``_fit`` loop on throwaway ``Obs`` bundles (the run's registry/ring stay
+    clean). The traced lap is judged against the SLOWER untraced lap, so
+    ordinary jitter doesn't fail the gate; a real regression (tracing adds
+    more than ``budget`` fractional per-step overhead) does."""
+    data = trainer._dataset(vol)
+    saved = trainer.obs
+
+    def lap(traced: bool) -> float:
+        trainer.obs = Obs(trace=traced, trace_capacity=8 * probe_steps + 16)
+        t0 = now()
+        trainer._fit(data, probe_steps, psnr0=0.0)
+        return since(t0)
+
+    try:
+        lap(False)  # warm caches/dispatch before anything is timed
+        untraced = [lap(False), lap(False)]
+        traced = lap(True)
+    finally:
+        trainer.obs = saved
+    overhead = traced / max(max(untraced), 1e-9) - 1.0
+    return {
+        "probe_steps": probe_steps,
+        "untraced_s": [round(t, 4) for t in untraced],
+        "traced_s": round(traced, 4),
+        "overhead": round(overhead, 4),
+        "budget": budget,
+        "ok": overhead <= budget,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="reduced CPU config (48px, 3 timesteps)")
@@ -130,6 +167,18 @@ def main(argv=None):
     ap.add_argument("--ckpt", default=None, help="temporal store dir (default: temp dir)")
     ap.add_argument("--no-scrub", action="store_true", help="skip the serving smoke")
     ap.add_argument("--report", default=None, help="write the JSON report here too")
+    ap.add_argument("--trace-out", default=None, metavar="PATH.jsonl",
+                    help="record per-step train spans; on exit write JSONL here "
+                         "plus a Perfetto-viewable .chrome.json next to it")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="span ring size (oldest spans drop beyond this)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final train.* registry snapshot as JSON")
+    ap.add_argument("--overhead-gate", type=int, default=0, metavar="STEPS",
+                    help="probe-lap steps for the traced-step overhead gate "
+                         "(0 = off); exits nonzero when tracing costs more "
+                         "than --overhead-budget per step")
+    ap.add_argument("--overhead-budget", type=float, default=0.25)
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -163,12 +212,14 @@ def main(argv=None):
                 "this driver records a fresh sequence from t=0 — pass a new --ckpt dir"
             )
 
+        obs = Obs(trace=args.trace_out is not None, trace_capacity=args.trace_capacity)
         trainer = InsituTrainer(
             cfg, mesh,
             capacity_factor=args.capacity_factor,
             cold_steps=args.cold_steps, warm_steps=args.warm_steps,
             n_views=args.views, max_points=args.max_points,
             n_steps_raymarch=args.raymarch_steps, init_scale=0.06, verbose=True,
+            obs=obs,
         )
         print(
             f"insitu: {args.dataset} x{args.timesteps} timesteps, vol {args.volume_res}^3, "
@@ -187,6 +238,7 @@ def main(argv=None):
                 for r in reports
             ],
             "recompile_count": trainer.n_traces,
+            "shard_balance": trainer.shard_balance(record=False),
             "store": store.stats(),
         }
         if not args.no_scrub:
@@ -196,17 +248,52 @@ def main(argv=None):
             if args.timesteps > 1:
                 out["live_replay"] = live_replay_smoke(store, cfg)
 
+    if args.overhead_gate > 0:
+        probe_vol = next(iter(synthetic_stream(args.dataset, 1, res=args.volume_res, t1=0.0)))
+        out["traced_overhead"] = traced_overhead_gate(
+            trainer, probe_vol, probe_steps=args.overhead_gate, budget=args.overhead_budget
+        )
+
     txt = json.dumps(out, indent=1)
     print(txt)
     if args.report:
         os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
         with open(args.report, "w") as f:
             f.write(txt)
+    if args.metrics_out:
+        os.makedirs(os.path.dirname(args.metrics_out) or ".", exist_ok=True)
+        with open(args.metrics_out, "w") as f:
+            json.dump(obs.metrics.snapshot(), f, indent=1, sort_keys=True)
+        print("metrics:", args.metrics_out)
+    if args.trace_out:
+        spans = obs.trace.drain()
+        meta = trace_meta(obs.trace, knobs={
+            "dataset": args.dataset, "timesteps": args.timesteps,
+            "cold_steps": args.cold_steps, "warm_steps": args.warm_steps,
+            "capacity": trainer.capacity,
+            "data_par": args.data_par, "model_par": args.model_par,
+        })
+        jsonl_path, chrome_path = write_trace(args.trace_out, spans, meta=meta)
+        with open(jsonl_path) as f:
+            n = validate_trace_jsonl(f.read())
+        print(f"trace: {n} spans -> {jsonl_path} + {chrome_path}")
+        if n.dropped:
+            print(f"WARNING: span ring overflowed — {n.dropped} spans LOST "
+                  f"(capacity {obs.trace.capacity}); raise --trace-capacity "
+                  f"before trusting stage breakdowns", file=sys.stderr)
 
     assert trainer.n_traces == 1, f"train step retraced: {trainer.n_traces} traces"
     if not args.no_scrub:
         assert out["scrub"]["frames_distinct"], "scrubbed frames are not per-timestep distinct"
         assert out["scrub"]["replay_new_misses"] == 0, "scrub replay missed the frame cache"
+    if args.overhead_gate > 0:
+        g = out["traced_overhead"]
+        if not g["ok"]:
+            raise SystemExit(
+                f"traced-step overhead gate FAILED: {g['overhead']:.1%} per step "
+                f"(budget {g['budget']:.0%}) over {g['probe_steps']} probe steps"
+            )
+        print(f"traced-step overhead {g['overhead']:+.1%} (budget {g['budget']:.0%}) ok")
     ratio = out["store"]["delta_compression"]
     print(
         f"insitu ok: {len(reports)} timesteps, 1 train-step trace, "

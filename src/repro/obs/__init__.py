@@ -31,11 +31,13 @@ from repro.obs.slo import SLOTracker, parse_slo_spec
 from repro.obs.trace import (
     NULL_RECORDER,
     STAGES,
+    TRAIN_STAGES,
     NullRecorder,
     Span,
     TraceRecorder,
     new_request_id,
 )
+from repro.obs import devmem
 
 __all__ = [
     "Obs",
@@ -52,6 +54,8 @@ __all__ = [
     "NULL_RECORDER",
     "Span",
     "STAGES",
+    "TRAIN_STAGES",
+    "devmem",
     "new_request_id",
     "spans_to_jsonl",
     "spans_to_chrome",

@@ -1,0 +1,113 @@
+"""Device-memory watermarks: per-device bytes-in-use / peak, backend-portable.
+
+Miranda-scale capacity failures (18M Gaussians on one A100) announce
+themselves as a slow climb of device bytes across stream timesteps — but only
+if someone is sampling. This module gives the training loop one call that
+works on every backend:
+
+``sample()`` asks each device for ``memory_stats()`` (GPU/TPU runtimes report
+``bytes_in_use`` and ``peak_bytes_in_use``) and, where the backend has no
+allocator stats (CPU hosts report ``None``), falls back to **live-array
+accounting**: every ``jax.live_arrays()`` buffer is attributed to the devices
+its shards live on, so the number still means "bytes this process holds on
+that device" — it just can't see allocator fragmentation or peak watermarks,
+which is why the sample carries its ``source``.
+
+``record()`` lands the sample on a ``MetricsRegistry`` under
+``train.devmem.*`` gauges (per-device ``bytes.<dev>`` / ``peak.<dev>`` plus
+cross-device maxima), the shape the per-timestep telemetry and the
+``BENCH_insitu.json`` record consume.
+"""
+from __future__ import annotations
+
+__all__ = ["DeviceMemSample", "sample", "record"]
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class DeviceMemSample:
+    """One point-in-time reading across the local devices."""
+
+    bytes_in_use: dict   # {device label: bytes currently held}
+    peak_bytes: dict     # {device label: peak bytes} (empty under fallback)
+    source: str          # "memory_stats" | "live_arrays"
+
+    @property
+    def max_bytes(self) -> int:
+        return max(self.bytes_in_use.values(), default=0)
+
+    @property
+    def max_peak(self) -> int:
+        return max(self.peak_bytes.values(), default=0)
+
+    def to_dict(self) -> dict:
+        return {
+            "source": self.source,
+            "bytes_in_use": dict(self.bytes_in_use),
+            "peak_bytes": dict(self.peak_bytes),
+            "max_bytes": self.max_bytes,
+            "max_peak": self.max_peak,
+        }
+
+
+def _label(dev) -> str:
+    return f"{dev.platform}{dev.id}"
+
+
+def sample(devices=None) -> DeviceMemSample:
+    """Read current device-memory occupancy for ``devices`` (default: all
+    local devices). Never raises on a stats-less backend — it degrades to
+    live-array accounting and says so in ``source``."""
+    import jax
+
+    if devices is None:
+        devices = jax.local_devices()
+    in_use: dict[str, int] = {}
+    peak: dict[str, int] = {}
+    missing = []
+    for dev in devices:
+        stats = None
+        try:
+            stats = dev.memory_stats()
+        except Exception:  # backend without allocator stats
+            stats = None
+        if stats and "bytes_in_use" in stats:
+            in_use[_label(dev)] = int(stats["bytes_in_use"])
+            if "peak_bytes_in_use" in stats:
+                peak[_label(dev)] = int(stats["peak_bytes_in_use"])
+        else:
+            missing.append(dev)
+    if not missing:
+        return DeviceMemSample(in_use, peak, "memory_stats")
+
+    # fallback: attribute every live buffer to the devices its shards occupy
+    want = {_label(d): 0 for d in missing}
+    for arr in jax.live_arrays():
+        try:
+            shards = arr.addressable_shards
+        except Exception:  # deleted/donated buffers race the walk
+            continue
+        for shard in shards:
+            label = _label(shard.device)
+            if label in want:
+                data = shard.data
+                want[label] += int(data.size * data.dtype.itemsize)
+    in_use.update(want)
+    return DeviceMemSample(in_use, peak, "live_arrays")
+
+
+def record(metrics, smp: DeviceMemSample | None = None, *, prefix: str = "train.devmem") -> DeviceMemSample:
+    """Sample (unless one is passed) and land it on ``metrics`` as gauges:
+    ``<prefix>.bytes.<dev>``, ``<prefix>.peak.<dev>``, plus the cross-device
+    ``<prefix>.max_bytes`` / ``<prefix>.max_peak`` watermarks."""
+    if smp is None:
+        smp = sample()
+    for dev, b in smp.bytes_in_use.items():
+        metrics.gauge(f"{prefix}.bytes.{dev}").set(int(b))
+    for dev, b in smp.peak_bytes.items():
+        metrics.gauge(f"{prefix}.peak.{dev}").set(int(b))
+    metrics.gauge(f"{prefix}.max_bytes").set(smp.max_bytes)
+    if smp.peak_bytes:
+        metrics.gauge(f"{prefix}.max_peak").set(smp.max_peak)
+    return smp

@@ -32,7 +32,7 @@ from __future__ import annotations
 import json
 from typing import Iterable, Sequence
 
-from repro.obs.trace import STAGES, Span
+from repro.obs.trace import STAGES, TRAIN_STAGES, Span
 
 __all__ = [
     "spans_to_jsonl",
@@ -101,8 +101,11 @@ def spans_to_chrome(spans: Sequence[Span], meta: dict | None = None) -> dict:
     ``meta`` (clock domain, drop accounting, knobs) rides in ``otherData``."""
     spans = sorted(spans, key=lambda s: (s.t0, s.seq))
     base = min((s.t0 for s in spans), default=0.0)
-    stage_base = {name: (i + 1) * LANE_STRIDE for i, name in enumerate(STAGES)}
-    overflow_base = (len(STAGES) + 1) * LANE_STRIDE  # unknown stage names
+    # serving stages first, then training stages: a trace that carries both
+    # (insitu run(server=...)) shows training and serving lanes on one clock
+    known = STAGES + TRAIN_STAGES
+    stage_base = {name: (i + 1) * LANE_STRIDE for i, name in enumerate(known)}
+    overflow_base = (len(known) + 1) * LANE_STRIDE  # unknown stage names
     # per-stage sub-lane occupancy: lane i is free for a span iff the last
     # span placed there ended at or before this span starts
     lane_busy_until: dict[str, list] = {}

@@ -34,12 +34,14 @@ import hashlib
 import json
 
 from repro.obs.export import validate_trace_jsonl
+from repro.obs.trace import TRAIN_STAGES
 
 __all__ = [
     "load_trace",
     "build_trees",
     "fit",
     "fit_trace",
+    "train_stage_breakdown",
     "CostModel",
     "StageDist",
     "OUTCOMES",
@@ -352,3 +354,30 @@ def fit_trace(source: str) -> CostModel:
     """``load_trace`` + ``fit`` in one call (path or raw JSONL text)."""
     meta, records = load_trace(source)
     return fit(meta, records)
+
+
+def train_stage_breakdown(records: list[dict]) -> dict:
+    """Per-stage duration distributions for the TRAINING span vocabulary.
+
+    A training trace uses one rid per stream timestep (or fit call), so the
+    serving ``fit()`` — which wants admit/submit trees — has nothing to say
+    about it; this is the training-side analog: ``{stage: StageDist}`` over
+    the :data:`~repro.obs.trace.TRAIN_STAGES` names found in ``records``
+    (seconds, sorted), plus a ``"timesteps"`` entry counting distinct rids
+    that carried training spans. Stage names outside the training vocabulary
+    are ignored, so a mixed training+serving trace (one shared Obs) feeds
+    this AND ``fit()`` from the same file."""
+    train = frozenset(TRAIN_STAGES)
+    samples: dict[str, list] = {}
+    rids = set()
+    for r in records:
+        if r["span"] not in train:
+            continue
+        rids.add(r["rid"])
+        samples.setdefault(r["span"], []).append(max(r["t1"] - r["t0"], 0.0))
+    out = {
+        stage: StageDist(sorted(round(s, 9) for s in got))
+        for stage, got in samples.items()
+    }
+    out["timesteps"] = len(rids)
+    return out

@@ -37,6 +37,7 @@ __all__ = [
     "NULL_RECORDER",
     "new_request_id",
     "STAGES",
+    "TRAIN_STAGES",
 ]
 
 # Stage vocabulary, in pipeline order. Exporters use this order to lay out
@@ -52,6 +53,23 @@ STAGES = (
     "assemble",   # tile-cache strip patch + frame assembly
     "encode",     # wire encoding (raw/delta/tiles)
     "write",      # socket write
+)
+
+# Training-loop stage vocabulary, in train-step order. One request id is
+# minted per stream timestep (or per GSTrainer.fit call), so a whole
+# timestep's stages join into one span tree and render next to serving
+# lanes on the same monotonic clock when training and serving share an Obs.
+TRAIN_STAGES = (
+    "extract",    # isosurface extraction from the volume timestep
+    "reseed",     # dead-slot reseeding (the streaming densify stand-in)
+    "batch",      # host-side view-batch assembly
+    "dispatch",   # jitted step call (returns under async dispatch)
+    "device",     # device compute, bounded by block_until_ready
+    "densify",    # densify_and_rebalance round (static pipeline only)
+    "eval",       # eval-view render + PSNR
+    "ckpt",       # checkpoint / temporal-store handoff
+    "serve",      # live RenderServer add_timestep handoff
+    "fit",        # the whole optimization loop of one timestep (parent span)
 )
 
 _request_ids = itertools.count(1)

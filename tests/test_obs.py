@@ -24,6 +24,7 @@ from repro.frontend import (
 from repro.obs import (
     NULL_RECORDER,
     STAGES,
+    TRAIN_STAGES,
     MetricsRegistry,
     Obs,
     Span,
@@ -193,7 +194,8 @@ def test_exporters_jsonl_contract_and_chrome_lanes(tmp_path):
     assert len(meta) == len(STAGES) + 1
     xs = {e["name"]: e for e in events if e["ph"] == "X"}
     assert xs["render"]["tid"] == (STAGES.index("render") + 1) * LANE_STRIDE
-    assert xs["mystery_stage"]["tid"] == (len(STAGES) + 1) * LANE_STRIDE
+    # overflow sits past the serving AND training lane blocks
+    assert xs["mystery_stage"]["tid"] == (len(STAGES) + len(TRAIN_STAGES) + 1) * LANE_STRIDE
     assert xs["admit"]["ts"] == 0.0  # rebased to the earliest span
     assert xs["render"]["dur"] == pytest.approx(0.2e6, rel=1e-3)
     assert chrome["otherData"]["clock_domain"] == "monotonic"

@@ -13,7 +13,7 @@ from repro.obs import MetricsRegistry, SLOTracker, parse_slo_spec
 from repro.obs.autotune import recommend
 from repro.obs.costmodel import StackParams, simulate
 from repro.obs.metrics import Histogram
-from repro.obs.replay import fit, fit_trace, load_trace
+from repro.obs.replay import fit, fit_trace, load_trace, train_stage_breakdown
 
 KNOBS = {
     "coalesce_ms": 2.0, "max_batch": 8, "pipeline_depth": 2,
@@ -78,6 +78,36 @@ def ground_truth(text: str) -> tuple[float, float]:
 
 
 # ================================================================== fitting
+def test_train_stage_breakdown_reads_training_spans_only():
+    """A mixed train+serve trace (one shared Obs bundle) feeds both readers:
+    the serving fit ignores training rids, and the training breakdown
+    ignores serving spans — each per-stage distribution covers exactly the
+    spans of its vocabulary."""
+    text = synth_trace(waves=2)
+    train = [
+        {"rid": 900, "span": "extract", "t0": 50.0, "t1": 50.1, "t_index": 0},
+        {"rid": 900, "span": "fit", "t0": 50.1, "t1": 51.1, "mode": "cold"},
+        {"rid": 900, "span": "batch", "t0": 50.1, "t1": 50.15, "step": 0},
+        {"rid": 900, "span": "device", "t0": 50.2, "t1": 50.5, "step": 0},
+        {"rid": 901, "span": "extract", "t0": 51.2, "t1": 51.25, "t_index": 1},
+        {"rid": 901, "span": "reseed", "t0": 51.25, "t1": 51.3, "filled": 7},
+        {"rid": 901, "span": "fit", "t0": 51.3, "t1": 51.8, "mode": "warm"},
+    ]
+    mixed = text + "".join(json.dumps(r) + "\n" for r in train)
+    meta, recs = load_trace(mixed)
+
+    bd = train_stage_breakdown(recs)
+    assert bd["timesteps"] == 2
+    assert bd["extract"].count == 2 and bd["fit"].count == 2
+    assert bd["reseed"].count == 1
+    assert bd["device"].samples == [pytest.approx(0.3)]
+    assert "render" not in bd and "admit" not in bd  # serving spans ignored
+
+    # the serving fit still sees only its own request trees
+    model = fit(meta, recs)
+    assert all(a["rid"] < 900 for a in model.arrivals)
+
+
 def test_fit_is_deterministic_and_order_independent():
     text = synth_trace()
     m1, m2 = fit_trace(text), fit_trace(text)
