@@ -1,0 +1,37 @@
+"""``repro.analysis``: invariant lints + lockset race sanitizer.
+
+Static passes (AST only — importing this package never imports jax):
+
+* :mod:`repro.analysis.retrace` — one-trace-per-sequence invariant
+  (jit/shard_map construction in loops / per-call functions, unhashable
+  static args).
+* :mod:`repro.analysis.names` — metric/span name vocabulary coherence
+  across code, benchmarks, and docs.
+* :mod:`repro.analysis.locks` — per-class lock discipline across the
+  gateway / render-executor / checkpoint-writer thread boundaries.
+* :mod:`repro.analysis.hygiene` — broad exception-handler lint.
+
+Runtime sanitizer (opt-in, ``REPRO_TSAN=1``): :mod:`repro.analysis.tsan`.
+CLI: ``python -m repro.launch.analyze`` (report + baseline ratchet).
+"""
+from repro.analysis.common import (
+    Finding,
+    SourceFile,
+    baseline_key,
+    diff_against_baseline,
+    iter_python_files,
+    load_baseline,
+    load_tree,
+    save_baseline,
+)
+
+__all__ = [
+    "Finding",
+    "SourceFile",
+    "baseline_key",
+    "diff_against_baseline",
+    "iter_python_files",
+    "load_baseline",
+    "load_tree",
+    "save_baseline",
+]

@@ -1,0 +1,199 @@
+"""Retrace lint: enforce the one-trace-per-sequence invariant statically.
+
+The stack's throughput story (PR 2/3: exactly ONE train-step trace per
+sequence, a fixed per-(shape, level, bucket) serving trace budget) is only
+guarded by recompile-count tests on the specific paths they exercise. This
+pass flags the *construction patterns* that create hidden retraces anywhere
+in the tree:
+
+``retrace.jit_in_loop``
+    ``jax.jit`` / ``pjit`` / ``shard_map`` / ``pallas_call`` constructed
+    inside a ``for``/``while`` body or comprehension. Every iteration builds
+    a fresh callable with a fresh trace cache — the canonical
+    recompile-per-step bug (and the closure-capture bug: a function defined
+    in the loop and jitted there captures loop state into the trace).
+
+``retrace.factory_in_loop``
+    A call, inside a loop, to a *jit factory* — any function in the scanned
+    tree whose body constructs a jit (``make_train_step``,
+    ``make_batched_eval_render``, ...). Same failure mode one call deeper.
+
+``retrace.jit_outside_factory``
+    A jit constructed inside a function that is not module scope, not an
+    ``__init__``, and not factory-named (``make_*``/``build_*``/``create_*``
+    /``resolve_*``/``get_*``, underscore-prefixed variants included). Such a
+    function re-traces on every call unless every caller caches the result —
+    a per-call cost invisible at the call site. One-shot CLI mains and
+    build-once helpers waive this with a reasoned pragma.
+
+``retrace.unhashable_static``
+    ``static_argnums``/``static_argnames`` given a list/dict/set literal.
+    jax hashes static arguments into the trace-cache key; unhashable
+    containers either fail at call time or (as dict values) defeat caching.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.common import Finding, SourceFile
+
+__all__ = ["run", "JIT_CTORS"]
+
+# names whose *call* constructs a traced/compiled callable
+JIT_CTORS = {"jit", "pjit", "shard_map", "pallas_call"}
+
+_FACTORY_NAME = re.compile(r"^_?(make|build|create|resolve|get)_")
+_CTOR_OK_FUNCS = {"__init__", "__post_init__", "__call__"}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    """Simple name of the called function: jax.jit -> "jit", jit -> "jit"."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _is_jit_ctor(node: ast.Call) -> bool:
+    name = _call_name(node)
+    if name in JIT_CTORS:
+        return True
+    # functools.partial(jax.jit, ...) builds a jit ctor; calling IT later is
+    # caught as a plain ctor call only if spelled directly — treat the
+    # partial itself as the construction site
+    if name == "partial" and node.args:
+        first = node.args[0]
+        if isinstance(first, (ast.Attribute, ast.Name)):
+            inner = first.attr if isinstance(first, ast.Attribute) else first.id
+            return inner in JIT_CTORS
+    return False
+
+
+def collect_jit_factories(files: list[SourceFile]) -> set[str]:
+    """Names of functions (anywhere in the tree) whose body constructs a jit
+    directly — the set ``factory_in_loop`` checks call sites against."""
+    factories: set[str] = set()
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            # only factory-NAMED functions join the set: call sites resolve
+            # by bare name, and a generic name ("run") that happens to build
+            # a kernel somewhere would flag every unrelated obj.run() call
+            if not _FACTORY_NAME.match(node.name):
+                continue
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and _is_jit_ctor(sub):
+                    factories.add(node.name)
+                    break
+    return factories
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile, factories: set[str]):
+        self.sf = sf
+        self.factories = factories
+        self.findings: list[Finding] = []
+        self._funcs: list[str] = []   # enclosing function-name stack
+        self._loops = 0               # enclosing for/while/comprehension depth
+
+    # ---- scope bookkeeping
+    def _visit_func(self, node):
+        # decorators evaluate at def time in the ENCLOSING scope: visit them
+        # before entering the function (else @partial(jax.jit, ...) on a
+        # module-level function reads as construction inside it)
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self._funcs.append(node.name)
+        outer_loops, self._loops = self._loops, 0  # a nested def resets loop
+        for arg_default in node.args.defaults + node.args.kw_defaults:
+            if arg_default is not None:
+                self.visit(arg_default)
+        for stmt in node.body:                     # context: its body runs
+            self.visit(stmt)                       # when called, not per-iter
+        self._loops = outer_loops
+        self._funcs.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_func
+
+    def _visit_loop(self, node):
+        self._loops += 1
+        self.generic_visit(node)
+        self._loops -= 1
+
+    visit_For = visit_AsyncFor = visit_While = _visit_loop
+    visit_ListComp = visit_SetComp = visit_DictComp = visit_GeneratorExp = _visit_loop
+
+    # ---- the rules
+    def visit_Call(self, node: ast.Call):
+        name = _call_name(node)
+        ctx = ".".join(self._funcs) or "<module>"
+        if _is_jit_ctor(node):
+            detail = f"{ctx}:{name}"
+            if self._loops:
+                self.findings.append(Finding(
+                    "retrace.jit_in_loop", self.sf.relpath, node.lineno, detail,
+                    f"{name}(...) constructed inside a loop in {ctx}: every "
+                    "iteration builds a fresh traced callable (fresh trace "
+                    "cache) — hoist the construction out of the loop",
+                ))
+            elif self._funcs and not self._factory_scope_ok():
+                self.findings.append(Finding(
+                    "retrace.jit_outside_factory", self.sf.relpath, node.lineno,
+                    detail,
+                    f"{name}(...) constructed inside {ctx}(): re-traces on "
+                    "every call unless callers cache the result — move into a "
+                    "make_*/build_* factory called once, or waive with a "
+                    "pragma if this path runs once per process",
+                ))
+            self._check_static_args(node, ctx, name)
+        elif self._loops and name in self.factories and name != (
+            self._funcs[-1] if self._funcs else None
+        ):
+            self.findings.append(Finding(
+                "retrace.factory_in_loop", self.sf.relpath, node.lineno,
+                f"{ctx}:{name}",
+                f"jit factory {name}() called inside a loop in {ctx}: each "
+                "call builds a fresh jitted callable — build once before the "
+                "loop and reuse it",
+            ))
+        self.generic_visit(node)
+
+    @staticmethod
+    def _factory_ok(fname: str) -> bool:
+        return bool(_FACTORY_NAME.match(fname)) or fname in _CTOR_OK_FUNCS
+
+    def _factory_scope_ok(self) -> bool:
+        """OK when ANY enclosing function is factory-named: a closure built
+        inside ``make_*`` (the kernel pattern — ``make_composite``'s inner
+        ``run`` wrapping a ``pallas_call``) is constructed per *trace* of its
+        jitted caller, not per call."""
+        return any(self._factory_ok(f) for f in self._funcs)
+
+    def _check_static_args(self, node: ast.Call, ctx: str, name: str):
+        for kw in node.keywords:
+            if kw.arg not in ("static_argnums", "static_argnames"):
+                continue
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, (ast.List, ast.Dict, ast.Set)):
+                    self.findings.append(Finding(
+                        "retrace.unhashable_static", self.sf.relpath,
+                        node.lineno, f"{ctx}:{name}:{kw.arg}",
+                        f"{kw.arg} passed a {type(sub).__name__.lower()} "
+                        f"literal in {ctx}: jax hashes static arguments into "
+                        "the trace-cache key — use a tuple",
+                    ))
+                    break
+
+
+def run(files: list[SourceFile]) -> list[Finding]:
+    factories = collect_jit_factories(files)
+    out: list[Finding] = []
+    for sf in files:
+        v = _Visitor(sf, factories)
+        v.visit(sf.tree)
+        out.extend(sf.apply_pragmas(v.findings))
+    return out

@@ -150,7 +150,7 @@ def shard_balance(state: GSTrainState, *, opacity_thresh: float = 0.005) -> dict
     }
 
 
-def record_shard_balance(metrics, bal: dict, *, prefix: str = "train") -> None:
+def record_shard_balance(metrics, bal: dict, *, prefix: str = "train") -> None:  # analysis: declare(train.shard_capacity.s*, train.shard_alive.s*, train.shard_visible.s*, train.shard_projected.s*, train.alive_total, train.shard_imbalance)
     """Land a :func:`shard_balance` result on a registry: per-shard gauges
     ``<prefix>.shard_alive.s<i>`` / ``.shard_visible.s<i>`` /
     ``.shard_projected.s<i>`` / ``.shard_capacity.s<i>`` plus the

@@ -160,10 +160,7 @@ class AsyncFrontendClient:
                 if msg is None:
                     break
                 self._route(*msg)
-        except Exception as e:  # noqa: BLE001 - ANY reader death (protocol
-            # violation, undecodable frame, version skew) must fail the
-            # in-flight futures loudly; a bare return would leave every
-            # awaiting render()/scrub()/stats() hanging forever
+        except Exception as e:  # analysis: allow(hygiene.broad_except, ANY reader death — protocol violation, undecodable frame, version skew — must fail the in-flight futures loudly; a bare return would leave every awaiting render()/scrub()/stats() hanging forever)
             self._fail_pending(e)
             return
         self._fail_pending(ConnectionError("gateway closed the connection"))

@@ -30,6 +30,7 @@ import sys
 import threading
 from concurrent.futures import ThreadPoolExecutor
 
+from repro.analysis import tsan
 from repro.frontend import protocol as proto
 from repro.frontend.sessions import PendingRender, Session, SessionManager
 from repro.obs import SLOTracker, new_request_id
@@ -112,6 +113,17 @@ class Gateway:
         # {"p99_ms": 250, "window_s": 30, "budget": 0.01} — the parsed form
         # of the CLI's --slo flag. Surfaced in stats + the metrics message.
         self.slo = SLOTracker(m, **slo) if slo else None
+
+        # opt-in runtime race sanitizer (REPRO_TSAN=1; no-op otherwise).
+        # The listed fields are written once by the serving loop thread
+        # after construction — ordered by GatewayThread._ready, which
+        # start() waits on before any caller can touch the gateway.
+        tsan.attach(
+            self, name="Gateway", dicts=("_sessions", "_writers"),
+            ordered=("port", "_server", "_dispatch_task", "_deliver_task",
+                     "_conn_tasks", "_work", "_gate", "_closed",
+                     "_prev_switch_interval"),
+        )
 
     # historical attribute reads, now backed by the shared registry
     @property
@@ -474,8 +486,8 @@ class Gateway:
                     results = await loop.run_in_executor(
                         self._render_exec, self._render_wave, wave
                     )
-                except Exception:  # noqa: BLE001 - last-ditch: the dispatcher
-                    self._c_engine_errors.inc()  # must outlive engine surprises
+                except Exception:  # analysis: allow(hygiene.broad_except, last-ditch dispatcher survival — the loop must outlive engine surprises; counted on gateway.engine_errors)
+                    self._c_engine_errors.inc()
                     continue
                 finally:
                     self._c_render_wait_s.add(_now() - t0)
@@ -495,7 +507,7 @@ class Gateway:
             await asyncio.gather(prev, return_exceptions=True)
         try:
             await self._deliver_inner(results)
-        except Exception:  # noqa: BLE001 - a failed wave must not vanish
+        except Exception:  # analysis: allow(hygiene.broad_except, counted on gateway.delivery_errors — a failed wave must not vanish)
             # without this, the successor's gather(return_exceptions=True)
             # would silently eat the exception and every counter would read
             # "all fine" while a whole wave of clients hangs
@@ -597,12 +609,12 @@ class Gateway:
                     request_id=pr.request_id if pr.request_id >= 0 else None,
                     gaze=pr.gaze, budget_ms=pr.budget_ms,
                 )))
-            except Exception as e:  # bad state (e.g. closing): fail just this one
+            except Exception as e:  # analysis: allow(hygiene.broad_except, bad submit state (e.g. closing) becomes this request's error response; counted on gateway.request_errors at delivery)
                 out.append((pr, None, e))
         try:
             server.run()  # drain the queue + the pipelined in-flight ring
             run_err = None
-        except Exception as e:
+        except Exception as e:  # analysis: allow(hygiene.broad_except, a run() failure fails every pending future below — surfaced per request, counted on gateway.request_errors)
             run_err = e
         for pr, fut in futs:
             try:
@@ -610,7 +622,7 @@ class Gateway:
                     out.append((pr, None, run_err))
                 else:
                     out.append((pr, fut.result(), None))
-            except Exception as e:
+            except Exception as e:  # analysis: allow(hygiene.broad_except, per-request render failure becomes that request's error response; counted on gateway.request_errors at delivery)
                 out.append((pr, None, e))
         return out
 
@@ -687,13 +699,17 @@ class GatewayThread:
         self._ready = threading.Event()
         self._startup_error: BaseException | None = None
         self._thread = threading.Thread(target=self._run, name="gs-gateway", daemon=True)
+        # _startup_error is Event-ordered (_run sets it before _ready.set();
+        # start() waits on _ready before reading) — same waiver as the
+        # static pass's pragma at the write site
+        tsan.attach(self, name="GatewayThread", ordered=("_startup_error",))
 
     def _run(self) -> None:
         asyncio.set_event_loop(self.loop)
         try:
             self.loop.run_until_complete(self.gateway.start())
-        except BaseException as e:
-            self._startup_error = e
+        except BaseException as e:  # analysis: allow(hygiene.broad_except, startup failure (incl. SystemExit/KeyboardInterrupt on the loop thread) is captured and re-raised in start())
+            self._startup_error = e  # analysis: allow(locks.thread_shared_write, ordered by the _ready Event: start() waits on it before reading)
             self._ready.set()
             return
         self._ready.set()

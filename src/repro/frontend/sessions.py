@@ -26,6 +26,7 @@ import itertools
 import threading
 from typing import Iterable, Mapping
 
+from repro.analysis import tsan
 from repro.core import gaussians as G
 from repro.core.config import GSConfig
 from repro.core.projection import Camera
@@ -75,6 +76,11 @@ class SessionManager:
         # on the loop thread -> locked.
         self._dirty_streams: dict[str, set[int] | None] = {}
         self._dirty_lock = threading.Lock()
+        # opt-in runtime race sanitizer (REPRO_TSAN=1; no-op otherwise):
+        # verifies the _dirty_lock discipline above actually holds at
+        # runtime, including dict mutations the static pass can't see
+        tsan.attach(self, name="SessionManager",
+                    locks=("_dirty_lock",), dicts=("_dirty_streams",))
 
     # ------------------------------------------------------------- register
     def _register(

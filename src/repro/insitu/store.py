@@ -48,6 +48,7 @@ import time
 
 import numpy as np
 
+from repro.analysis import tsan
 from repro.checkpoint.store import _leaf_to_host, restore_checkpoint, save_checkpoint
 from repro.core import gaussians as G
 
@@ -115,6 +116,12 @@ class TemporalCheckpointStore:
         self._recon: dict[str, np.ndarray] | None = None
         if self._index["timesteps"]:
             self._recon = _to_host(self.load(self._index["timesteps"][-1]["t"]))
+        # opt-in runtime race sanitizer (REPRO_TSAN=1; no-op otherwise).
+        # The listed fields cross the writer-thread boundary ordered by the
+        # bounded queue + flush()'s queue.join(), not by a lock — any OTHER
+        # field the writer starts touching is a reported race.
+        tsan.attach(self, name="TemporalCheckpointStore",
+                    ordered=("_recon", "_index", "_writer_err", "write_s"))
 
     # ------------------------------------------------------------------ write
     def append(self, t: int, params: G.GaussianModel) -> str:
@@ -141,7 +148,7 @@ class TemporalCheckpointStore:
                 # bounded: each entry is a full host copy of the params, so a
                 # writer slower than training must backpressure append() here
                 # rather than grow the queue (and host memory) without limit
-                self._queue = queue.Queue(maxsize=2)
+                self._queue = queue.Queue(maxsize=2)  # analysis: allow(locks.thread_shared_write, written before Thread.start(); thread-start happens-before publishes it to the writer)
                 self._writer = threading.Thread(
                     target=self._writer_loop, name="temporal-store-writer", daemon=True
                 )
@@ -164,9 +171,9 @@ class TemporalCheckpointStore:
                 # (deltas chain against the last *stored* frame) — only the
                 # failed timestep is lost, and flush()/append() report it
                 self._write(*item)
-            except BaseException as e:  # surfaced on the next append/flush
+            except BaseException as e:  # analysis: allow(hygiene.broad_except, writer must survive any failure to keep draining; first error is surfaced on the next append/flush)
                 if self._writer_err is None:  # first failure wins
-                    self._writer_err = (item[0], e)
+                    self._writer_err = (item[0], e)  # analysis: allow(locks.thread_shared_write, single-writer field; readers are ordered behind it by queue.join() in flush())
             finally:
                 self._queue.task_done()
 
@@ -207,7 +214,7 @@ class TemporalCheckpointStore:
             self._recon = recon
         with open(self._index_path, "w") as f:
             json.dump(self._index, f, indent=1)
-        self.write_s += time.perf_counter() - t0
+        self.write_s += time.perf_counter() - t0  # analysis: allow(locks.thread_shared_write, written only by the writer thread (or sync path); stats() readers are ordered behind flush()'s queue.join())
 
     # ------------------------------------------------------------- lifecycle
     def _raise_writer_error(self) -> None:

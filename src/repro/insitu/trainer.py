@@ -230,7 +230,7 @@ class InsituTrainer:
             return 0
         try:
             return int(self._step_fn._cache_size())
-        except Exception:  # pragma: no cover - cache introspection API drift
+        except (AttributeError, TypeError):  # pragma: no cover - cache introspection API drift
             return -1
 
     def _dataset(self, vol: VolumeSpec) -> ViewDataset:

@@ -308,7 +308,8 @@ class MetricsRegistry:
     def on_reset(self, hook) -> None:
         """Register ``hook()`` to run inside ``reset()`` — for window state
         that lives outside the registry (plain lists, t_first/t_last)."""
-        self._reset_hooks.append(hook)
+        with self._lock:  # reset() iterates the hooks under this lock
+            self._reset_hooks.append(hook)
 
     def snapshot(self) -> dict:
         """Atomic point-in-time read: {dotted name: value | histogram dict}.

@@ -257,7 +257,7 @@ class RenderServer:
         # one render fn per level, shared by every timeline entry — jit
         # retraces only if a timestep brings a new padded Gaussian count
         self._level_render = tuple(
-            make_batched_eval_render(self.mesh, c) for c in self._level_cfgs
+            make_batched_eval_render(self.mesh, c) for c in self._level_cfgs  # analysis: allow(retrace.factory_in_loop, one factory call per LOD level at construction; cached in _level_render for the server lifetime)
         )
 
         # Pose registry: every pose that ever populated the tile cache, keyed
@@ -408,7 +408,7 @@ class RenderServer:
         recompile counter: steady-state serving must never grow this)."""
         try:
             return sum(int(f._cache_size()) for f in self._level_render)
-        except Exception:  # pragma: no cover - cache introspection API drift
+        except (AttributeError, TypeError):  # pragma: no cover - cache introspection API drift
             return -1
 
     @property

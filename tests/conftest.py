@@ -16,6 +16,20 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _tsan_guard():
+    """Under REPRO_TSAN=1, fail any test whose threads raced on an
+    instrumented object (gateway / session manager / checkpoint store).
+    Inert otherwise — attach() is a no-op without the env flag."""
+    from repro.analysis import tsan
+
+    tsan.reset()
+    yield
+    if tsan.enabled():
+        races = tsan.take_races()
+        assert not races, "tsan: " + "; ".join(str(r) for r in races)
+
+
 def make_scene(n=200, seed=0, spread=0.5, scale=0.05):
     r = np.random.default_rng(seed)
     pts = r.normal(0, spread, (n, 3)).astype(np.float32)

@@ -1,0 +1,565 @@
+"""repro.analysis: known-good/known-bad fixtures per rule class, pragma
+handling, the baseline ratchet, the runtime sanitizer, and a live-repo
+self-check (the committed tree + ANALYSIS_baseline.json must be clean).
+
+Pure AST + threading — never imports jax, so the whole file runs in
+milliseconds. Fixture sources live in tmp trees; dotted metric literals in
+assertions are kept off the real vocabulary (``*.fixture_*``) so the live
+``names`` pass scanning tests/ sees only waived or non-matching strings.
+"""
+import json
+import os
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import common, hygiene, locks, names, retrace, tsan
+from repro.launch import analyze
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load(tmp_path, source, name="mod.py"):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return common.load_tree([str(p)], str(tmp_path))
+
+
+def rules_of(findings, *, active_only=True):
+    return sorted(f.rule for f in findings
+                  if not (active_only and f.allowed_by is not None))
+
+
+# ---------------------------------------------------------------- retrace
+def test_retrace_jit_in_loop(tmp_path):
+    fs = load(tmp_path, """
+        import jax
+        def caller(xs):
+            for x in xs:
+                f = jax.jit(step)
+            gs = [jax.jit(g) for g in xs]
+    """)
+    found = retrace.run(fs)
+    assert rules_of(found) == ["retrace.jit_in_loop", "retrace.jit_in_loop"]
+    assert all("caller" in f.detail for f in found)
+
+
+def test_retrace_factory_in_loop(tmp_path):
+    fs = load(tmp_path, """
+        import jax
+        def make_step():
+            return jax.jit(step)
+        def caller(xs):
+            for x in xs:
+                s = make_step()
+    """)
+    assert rules_of(retrace.run(fs)) == ["retrace.factory_in_loop"]
+
+
+def test_retrace_jit_outside_factory_and_waivers(tmp_path):
+    fs = load(tmp_path, """
+        import jax
+        def handler(x):
+            g = jax.jit(step)       # per-call retrace: flagged
+            return g(x)
+        def make_kernel():
+            def run(x):             # closure inside a factory: fine
+                return pallas_call(kern)(x)
+            return jax.jit(run)
+        def __init__(self):
+            self.f = jax.jit(step)  # construction-time: fine
+    """)
+    found = retrace.run(fs)
+    assert rules_of(found) == ["retrace.jit_outside_factory"]
+    assert found[0].detail == "handler:jit"
+
+
+def test_retrace_decorator_is_enclosing_scope(tmp_path):
+    # @partial(jax.jit) on a module-level def evaluates at module scope:
+    # neither an outside-factory construction nor a factory classification
+    fs = load(tmp_path, """
+        import jax
+        from functools import partial
+        @partial(jax.jit, static_argnums=(1,))
+        def render(x, n):
+            return x * n
+        def caller(xs):
+            return [render(x, 2) for x in xs]
+    """)
+    assert retrace.run(fs) == []
+
+
+def test_retrace_generic_names_never_factories(tmp_path):
+    # "run" builds a jit somewhere, but generic names stay out of the
+    # factory set — obj.run() in a loop elsewhere must not flag
+    fs = load(tmp_path, """
+        import jax
+        class K:
+            def run(self):
+                return jax.jit(step)
+        def drive(server, xs):
+            for x in xs:
+                server.run()
+    """)
+    assert rules_of(retrace.run(fs)) == ["retrace.jit_outside_factory"]
+
+
+def test_retrace_unhashable_static(tmp_path):
+    fs = load(tmp_path, """
+        import jax
+        f = jax.jit(step, static_argnums=[1])
+        g = jax.jit(step, static_argnames=("n",))
+    """)
+    found = retrace.run(fs)
+    assert rules_of(found) == ["retrace.unhashable_static"]
+    assert found[0].detail.endswith("static_argnums")
+
+
+# ------------------------------------------------------------------ names
+def test_names_vocabulary(tmp_path):  # analysis: allow(names., fixture metric literals in assertions)
+    fs = load(tmp_path, """
+        def wire(m, snap):
+            m.counter("server.fixture_hits").inc()
+            m.gauge("server.fixture_dead").set(1)
+            return snap["server.fixture_hits"], snap["server.fixture_typo"]
+    """)
+    found = names.run(fs)
+    assert rules_of(found) == ["names.unread", "names.unregistered_use"]
+    by_rule = {f.rule: f for f in found}
+    assert by_rule["names.unread"].detail == "server.fixture_dead"
+    assert by_rule["names.unregistered_use"].detail == "server.fixture_typo"
+
+
+def test_names_doc_evidence_and_drift(tmp_path):  # analysis: allow(names., fixture metric literals in assertions)
+    fs = load(tmp_path, """
+        def wire(m):
+            m.gauge("server.fixture_doc").set(1)
+    """)
+    docs = {"README.md": "reports `server.fixture_doc` and `server.fixture_ghost`"}
+    found = names.run(fs, docs)
+    # doc mention reads fixture_doc (no unread); fixture_ghost drifted
+    assert rules_of(found) == ["names.doc_drift"]
+    assert found[0].detail == "server.fixture_ghost"
+    assert found[0].path == "README.md"
+
+
+def test_names_dynamic_families_and_declare(tmp_path):  # analysis: allow(names., fixture metric literals in assertions)
+    fs = load(tmp_path, """
+        def wire(m, prefix, snap, i):
+            m.gauge(f"server.fixture_l{i}").set(1)     # family: resolvable
+            m.gauge(prefix + ".depth").set(1)          # unresolvable: flagged
+            m.gauge(prefix + ".width").set(1)  # analysis: declare(train.fixture_w.*)
+            return snap["server.fixture_l3"], snap["train.fixture_w.depth"]
+    """)
+    docs = {"README.md": "see `server.fixture_l<i>` per level"}
+    found = names.run(fs, docs)
+    # both uses covered (family + declared family), doc token matches the
+    # family; only the undeclared dynamic registration remains
+    assert rules_of(found) == ["names.dynamic_unresolved"]
+    assert found[0].detail == "wire"
+
+
+def test_names_prefix_read_reclassification(tmp_path):  # analysis: allow(names., fixture metric literals in assertions)
+    fs = load(tmp_path, """
+        def wire(m, snap):
+            m.counter("server.fixture_a.s0").inc()
+            m.counter("server.fixture_a.s1").inc()
+            return {k: v for k, v in snap.items()
+                    if k.startswith("server.fixture_a.s")}
+    """)
+    # the startswith literal is a prefix read, not a typo'd use — and it
+    # counts as read evidence for both registered names
+    assert names.run(fs) == []
+
+
+def test_names_spans(tmp_path):
+    fs = load(tmp_path, """
+        STAGES = ("alpha", "beta")
+        def go(rec, rid):
+            rec.record(rid, "alpha", 0.0)
+            rec.record(rid, "gamma", 0.0)
+    """)
+    found = names.run(fs)
+    assert rules_of(found) == ["names.unknown_span", "names.unrecorded_stage"]
+    details = {f.rule: f.detail for f in found}
+    assert details["names.unknown_span"] == "gamma"
+    assert details["names.unrecorded_stage"] == "beta"
+
+
+def test_names_test_files_may_record_offvocab_spans(tmp_path):
+    vocab = load(tmp_path, "STAGES = ('alpha',)\ndef go(r, rid): r.record(rid, 'alpha', 0)\n", name="src/trace.py")
+    test = load(tmp_path, "def go(r, rid): r.record(rid, 'mystery', 0)\n", name="tests/t_x.py")
+    assert names.run(vocab + test) == []
+
+
+# ------------------------------------------------------------------ locks
+def test_locks_inconsistent_guard(tmp_path):
+    fs = load(tmp_path, """
+        import threading
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+            def put(self, x):
+                with self._lock:
+                    self.items.append(x)
+            def drop(self):
+                self.items = []
+    """)
+    found = locks.run(fs)
+    assert rules_of(found) == ["locks.inconsistent_guard"]
+    assert found[0].detail == "C.items"
+
+
+def test_locks_consistent_guard_is_clean(tmp_path):
+    fs = load(tmp_path, """
+        import threading
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+            def put(self, x):
+                with self._lock:
+                    self.items.append(x)
+            def drain(self):
+                with self._lock:
+                    out, self.items = self.items, []
+                return out
+    """)
+    assert locks.run(fs) == []
+
+
+def test_locks_thread_shared_write(tmp_path):
+    fs = load(tmp_path, """
+        import threading
+        class W:
+            def start(self):
+                self._t = threading.Thread(target=self._loop)
+                self._t.start()
+            def _loop(self):
+                self.count = 1
+            def read(self):
+                return self.count
+    """)
+    found = locks.run(fs)
+    assert rules_of(found) == ["locks.thread_shared_write"]
+    assert found[0].detail == "W.count"
+
+
+def test_locks_thread_shared_guarded_is_clean(tmp_path):
+    fs = load(tmp_path, """
+        import threading
+        class W:
+            def start(self):
+                self._lock = threading.Lock()
+                threading.Thread(target=self._loop).start()
+            def _loop(self):
+                with self._lock:
+                    self.count = 1
+            def read(self):
+                with self._lock:
+                    return self.count
+    """)
+    assert locks.run(fs) == []
+
+
+def test_locks_pragma_on_method_header_covers_block(tmp_path):
+    fs = load(tmp_path, """
+        import threading
+        class W:
+            def start(self):
+                threading.Thread(target=self._loop).start()
+            def _loop(self):  # analysis: allow(locks.thread_shared_write, ordered by queue.join)
+                self.count = 1
+            def read(self):
+                return self.count
+    """)
+    found = locks.run(fs)
+    assert len(found) == 1
+    assert found[0].allowed_by == "ordered by queue.join"
+
+
+# ---------------------------------------------------------------- hygiene
+def test_hygiene_broad_except(tmp_path):
+    fs = load(tmp_path, """
+        def f():
+            try:
+                g()
+            except Exception:
+                pass
+            try:
+                g()
+            except (ValueError, BaseException):
+                pass
+            try:
+                g()
+            except:
+                pass
+            try:
+                g()
+            except ValueError:
+                pass
+    """)
+    found = hygiene.run(fs)
+    assert rules_of(found) == ["hygiene.broad_except"] * 3
+    assert all(f.detail == "f" for f in found)
+
+
+# ---------------------------------------------------------------- pragmas
+def test_pragma_placements(tmp_path):
+    fs = load(tmp_path, """
+        import jax
+        def a(x):
+            g = jax.jit(step)  # analysis: allow(retrace.jit_outside_factory, one-shot path)
+            return g(x)
+        def b(x):
+            # analysis: allow(retrace., whole-family prefix on next line)
+            g = jax.jit(step)
+            return g(x)
+        def c(x):  # analysis: allow(*, block scope from the def header)
+            g = jax.jit(step)
+            return g(x)
+        def d(x):
+            g = jax.jit(step)  # analysis: allow(locks.thread_shared_write, wrong rule)
+            return g(x)
+    """)
+    found = retrace.run(fs)
+    assert len(found) == 4
+    by_fn = {f.detail.split(":")[0]: f for f in found}
+    assert by_fn["a"].allowed_by == "one-shot path"
+    assert by_fn["b"].allowed_by == "whole-family prefix on next line"
+    assert by_fn["c"].allowed_by == "block scope from the def header"
+    assert by_fn["d"].allowed_by is None  # rule mismatch: still active
+
+
+# --------------------------------------------------------------- baseline
+def test_baseline_ratchet_roundtrip(tmp_path):
+    f1 = common.Finding("r.x", "a.py", 3, "A.f", "m")
+    f2 = common.Finding("r.x", "a.py", 9, "A.f", "m")   # same key, 2nd hit
+    f3 = common.Finding("r.y", "b.py", 1, "B.g", "m")
+    path = str(tmp_path / "base.json")
+    common.save_baseline(path, [f1, f2, f3])
+    base = common.load_baseline(path)
+    assert base == {"r.x|a.py|A.f": 2, "r.y|b.py|B.g": 1}
+
+    # same findings: nothing new; dropping one key reports it fixed
+    new, fixed, _ = common.diff_against_baseline([f1, f2, f3], base)
+    assert new == [] and fixed == []
+    new, fixed, _ = common.diff_against_baseline([f1, f2], base)
+    assert new == [] and fixed == ["r.y|b.py|B.g"]
+
+    # a third hit of a baselined-at-2 key IS new; so is a fresh key
+    f4 = common.Finding("r.x", "a.py", 20, "A.f", "m")
+    f5 = common.Finding("r.z", "c.py", 2, "C.h", "m")
+    new, _, _ = common.diff_against_baseline([f1, f2, f3, f4, f5], base)
+    assert sorted(f.key() for f in new) == ["r.x|a.py|A.f", "r.z|c.py|C.h"]
+
+    # pragma-allowed findings never count against the baseline
+    f5.allowed_by = "waived"
+    new, _, _ = common.diff_against_baseline([f1, f2, f3, f5], base)
+    assert new == []
+
+
+_BAD_MODULE = """
+import threading
+import jax
+
+STAGES = ("alpha", "beta")
+
+def make_model():
+    return jax.jit(model)
+
+def handler(xs):
+    out = []
+    for x in xs:
+        f = jax.jit(step)
+        g = make_model()
+        out.append(f(x))
+    h = jax.jit(step, static_argnums=[0])
+    try:
+        return h(out)
+    except Exception:
+        return None
+
+def meter(m, rec, rid, prefix, snap):
+    m.counter("server.fixture_hits").inc()
+    m.gauge(prefix + ".depth").set(1)
+    rec.record(rid, "gamma", 0.0)
+    return snap["server.fixture_typo"]
+
+class Shared:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items = []
+        self.count = 0
+    def put(self, x):
+        with self._lock:
+            self.items.append(x)
+    def drop(self):
+        self.items = []
+    def start(self):
+        threading.Thread(target=self._loop).start()
+    def _loop(self):
+        self.count += 1
+    def read(self):
+        return self.count
+"""
+
+_EXPECT_SEEDED = {
+    "retrace.jit_in_loop",
+    "retrace.factory_in_loop",
+    "retrace.jit_outside_factory",
+    "retrace.unhashable_static",
+    "hygiene.broad_except",
+    "locks.inconsistent_guard",
+    "locks.thread_shared_write",
+    "names.unread",
+    "names.unregistered_use",
+    "names.dynamic_unresolved",
+    "names.unknown_span",
+    "names.unrecorded_stage",
+}
+
+
+def test_cli_seeded_regressions_fail_then_baseline(tmp_path, capsys):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "seeded.py").write_text(_BAD_MODULE)
+    report = tmp_path / "rep.json"
+
+    rc = analyze.main(["--root", str(tmp_path), "--report", str(report), "-q"])
+    assert rc == 1
+    rep = json.loads(report.read_text())
+    assert set(rep["by_rule"]) == _EXPECT_SEEDED
+    assert rep["findings"] == rep["baseline"]["new"] == len(rep["new_findings"])
+
+    # accept the debt: baseline it, rerun clean
+    rc = analyze.main(["--root", str(tmp_path), "--update-baseline", "-q"])
+    assert rc == 0
+    assert (tmp_path / "ANALYSIS_baseline.json").exists()
+    rc = analyze.main(["--root", str(tmp_path), "-q"])
+    assert rc == 0
+
+    # growth over the baseline fails again
+    with open(tmp_path / "src" / "seeded.py", "a") as f:
+        f.write("\ndef another(x):\n    return jax.jit(step)(x)\n")
+    rc = analyze.main(["--root", str(tmp_path), "--report", str(report), "-q"])
+    assert rc == 1
+    rep = json.loads(report.read_text())
+    assert [n["detail"] for n in rep["new_findings"]] == ["another:jit"]
+
+
+def test_cli_rule_filter_and_parse_error(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "seeded.py").write_text(_BAD_MODULE)
+    rc = analyze.main(["--root", str(tmp_path), "--rules", "locks.", "-q",
+                       "--report", str(tmp_path / "r.json")])
+    assert rc == 1
+    rep = json.loads((tmp_path / "r.json").read_text())
+    assert set(rep["by_rule"]) == {"locks.inconsistent_guard",
+                                   "locks.thread_shared_write"}
+
+    (tmp_path / "src" / "broken.py").write_text("def f(:\n")
+    assert analyze.main(["--root", str(tmp_path), "-q"]) == 2
+
+
+def test_live_repo_is_clean_against_committed_baseline(tmp_path):
+    """The committed tree + ANALYSIS_baseline.json must analyze clean —
+    the same invocation CI gates on."""
+    report = tmp_path / "rep.json"
+    rc = analyze.main(["--root", REPO_ROOT, "--report", str(report), "-q"])
+    assert rc == 0, report.read_text()
+    rep = json.loads(report.read_text())
+    assert rep["baseline"]["new"] == 0
+    # the baseline is the accepted-debt list, not a dumping ground: only the
+    # one-shot CLI mains live there
+    assert rep["findings"] <= 6
+    assert rep["elapsed_s"] < 30.0
+
+
+# ------------------------------------------------------------------- tsan
+class _Box:
+    def __init__(self):
+        self.x = 0
+        self.lk = threading.Lock()
+        self.d = {}
+
+
+@pytest.fixture
+def tsan_on(monkeypatch):
+    monkeypatch.setenv("REPRO_TSAN", "1")
+    tsan.reset()
+    yield
+    tsan.reset()
+
+
+def _in_thread(fn):
+    t = threading.Thread(target=fn, name="racer")
+    t.start()
+    t.join()
+
+
+def test_tsan_detects_unlocked_write_write(tsan_on):
+    o = tsan.attach(_Box(), name="Box")
+    o.x = 1
+    _in_thread(lambda: setattr(o, "x", 2))
+    races = tsan.take_races()
+    assert len(races) == 1
+    assert races[0].field == "x" and races[0].obj == "Box"
+    assert "racer" in races[0].threads
+    # reported once per field, even on further racing writes
+    _in_thread(lambda: setattr(o, "x", 3))
+    assert tsan.take_races() == []
+
+
+def test_tsan_lock_discipline_is_clean(tsan_on):
+    o = tsan.attach(_Box(), name="Box", locks=("lk",))
+    def w():
+        with o.lk:
+            o.x += 1
+    w()
+    _in_thread(w)
+    assert tsan.take_races() == []
+
+
+def test_tsan_catches_aliased_dict_mutation(tsan_on):
+    o = tsan.attach(_Box(), name="Box", dicts=("d",))
+    alias = o.d          # the aliasing the static pass cannot see
+    alias["k"] = 1
+    _in_thread(lambda: alias.pop("k"))
+    races = tsan.take_races()
+    assert [r.field for r in races] == ["d"]
+
+
+def test_tsan_dict_swap_keeps_tracking(tsan_on):
+    o = tsan.attach(_Box(), name="Box", dicts=("d",))
+    o.d["k"] = 1
+    o.d = {}             # take_dirty()-style swap: rewrapped transparently
+    assert isinstance(o.d, tsan.TrackedDict)
+    _in_thread(lambda: o.d.update(k=2))
+    assert [r.field for r in tsan.take_races()] == ["d"]
+
+
+def test_tsan_ordered_fields_exempt(tsan_on):
+    o = tsan.attach(_Box(), name="Box", ordered=("x",))
+    o.x = 1
+    _in_thread(lambda: setattr(o, "x", 2))
+    assert tsan.take_races() == []
+
+
+def test_tsan_single_thread_never_races(tsan_on):
+    o = tsan.attach(_Box(), name="Box", dicts=("d",))
+    for i in range(10):
+        o.x = i
+        o.d[i] = i
+    assert tsan.take_races() == []
+
+
+def test_tsan_disabled_is_a_noop(monkeypatch):
+    monkeypatch.delenv("REPRO_TSAN", raising=False)
+    o = _Box()
+    assert not tsan.enabled()
+    assert tsan.attach(o, name="Box", locks=("lk",), dicts=("d",)) is o
+    assert type(o) is _Box
+    assert type(o.d) is dict and not isinstance(o.lk, tsan.TrackedLock)
